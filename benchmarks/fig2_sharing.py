@@ -1,0 +1,85 @@
+"""Paper Fig. 2: accuracy vs KV-cache sharing ratio.
+
+Trains (tiny-scale, CPU):
+  base     — pretrained on the task mixture (the frozen prefill module),
+  full     — Full-FT on the target domain (standard fine-tuning),
+  ps       — cache-conditioned FT on the target domain (PrefillShare).
+
+Then evaluates across share ratios 0..1: the fraction of layers whose prompt
+cache comes from the BASE model rather than the decode model's own prefill.
+Expected reproduction of the paper's curve: Full-FT collapses as ratio -> 1
+(naive sharing), PrefillShare holds near its ratio-0... ratio-1 operating
+point (it was *trained* at ratio 1).
+"""
+from __future__ import annotations
+
+import functools
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.models.model import train_loss
+from repro.training import data as D
+from repro.training.optim import AdamW, warmup_cosine
+from repro.training.trainer import (Trainer, evaluate,
+                                    finetune_cache_conditioned, finetune_full,
+                                    pretrain_batches)
+
+TINY = ModelConfig(name="tiny", arch_type="dense", n_layers=4, d_model=128,
+                   n_heads=4, n_kv_heads=4, d_ff=384, vocab_size=64,
+                   dtype="float32")
+
+
+def train_models(domain="copy", *, pretrain_steps=600, ft_steps=600,
+                 batch=48, lr=3e-3, seed=0, cfg=TINY, log_every=0):
+    spec = D.TaskSpec(domain=domain, n_symbols=8, prompt_len=10, vocab=64)
+    base = init_params(cfg, jax.random.PRNGKey(seed))
+    tr = Trainer(functools.partial(train_loss, cfg, remat=False),
+                 AdamW(warmup_cosine(lr, pretrain_steps), weight_decay=0.01))
+    mix = D.TaskSpec(domain="mix", n_symbols=8, prompt_len=10, vocab=64)
+    base, _ = tr.fit(base, pretrain_batches(cfg, seed, pretrain_steps, batch,
+                                            spec=mix), log_every=log_every,
+                     tag="pretrain")
+    full, _ = finetune_full(cfg, base, domain, seed=seed + 1, steps=ft_steps,
+                            batch=batch, lr=lr / 2, spec=spec,
+                            log_every=log_every)
+    ps, _ = finetune_cache_conditioned(cfg, base, base, domain,
+                                       seed=seed + 1, steps=ft_steps,
+                                       batch=batch, lr=lr / 2, spec=spec,
+                                       log_every=log_every)
+    return cfg, spec, base, full, ps
+
+
+def run(quick=True, domain="copy"):
+    steps = (300, 300) if quick else (800, 800)
+    cfg, spec, base, full, ps = train_models(domain, pretrain_steps=steps[0],
+                                             ft_steps=steps[1])
+    ratios = (0.0, 0.25, 0.5, 0.75, 1.0)
+    rows = []
+    for r in ratios:
+        acc_full = evaluate(cfg, full, base, domain, seed=7, share_ratio=r,
+                            spec=spec, per_token=True)
+        acc_ps = evaluate(cfg, ps, base, domain, seed=7, share_ratio=r,
+                          spec=spec, per_token=True)
+        rows.append({"ratio": r, "full_ft": acc_full, "prefillshare": acc_ps})
+    acc_base = evaluate(cfg, base, base, domain, seed=7, share_ratio=1.0,
+                        spec=spec, per_token=True)
+    rows.append({"ratio": "base-noft", "full_ft": acc_base,
+                 "prefillshare": acc_base})
+    return rows
+
+
+def main(quick=True):
+    rows = run(quick=quick)
+    print("share_ratio,full_ft_acc,prefillshare_acc")
+    for r in rows:
+        print(f"{r['ratio']},{r['full_ft']:.3f},{r['prefillshare']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--full" not in sys.argv)

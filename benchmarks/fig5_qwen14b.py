@@ -1,0 +1,32 @@
+"""Paper Appendix B.3 (Figs. 5-6): the serving experiments replicated with a
+Qwen3-14B backbone instead of LLaMA3.1-8B — identical workloads/settings."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import fig3_serving, fig4_concurrency
+
+
+def run(quick: bool = True):
+    rows3 = fig3_serving.run(quick=quick, arch="qwen3-14b")
+    rows4 = fig4_concurrency.run(quick=quick, arch="qwen3-14b")
+    return rows3, rows4
+
+
+def main(quick=True):
+    rows3, rows4 = run(quick=quick)
+    print("pattern,rate,mode,p95_e2e_s,throughput_tok_s,prefix_hit_ratio")
+    for r in rows3:
+        print(f"{r['pattern']},{r['rate']},{r['mode']},{r['p95_e2e_s']:.3f},"
+              f"{r['throughput_tok_s']:.0f},{r['prefix_hit_ratio']:.3f}")
+    print("mode,max_concurrent,prefix_hit_ratio,throughput_tok_s")
+    for r in rows4:
+        print(f"{r['mode']},{r['max_concurrent']},{r['prefix_hit_ratio']:.3f},"
+              f"{r['throughput_tok_s']:.0f}")
+    return rows3, rows4
+
+
+if __name__ == "__main__":
+    main(quick="--full" not in sys.argv)

@@ -1,0 +1,71 @@
+"""Paper §3.3 efficiency analysis: Eq. 8 vs Eq. 9 memory scaling.
+
+Analytic: Mem_baseline = N·(L_shared + L_unique) vs
+          Mem_prefillshare = L_shared + N·L_unique,
+and MEASURED from the simulator's paged pools (peak blocks held across the
+prefill pool) for the same workload, confirming the structural claim.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import get_config
+from repro.kvcache.manager import kv_bytes_per_token
+from repro.serving.simulator import ServingConfig, Simulator
+from repro.serving.workload import make_sessions
+
+
+def analytic(cfg, n_models, l_shared, l_unique):
+    per_tok = kv_bytes_per_token(cfg)
+    base = n_models * (l_shared + l_unique) * per_tok
+    ps = (l_shared + n_models * l_unique) * per_tok
+    return base, ps
+
+
+def measured(cfg, mode, n_sessions=40, rate=2.0):
+    sessions = make_sessions("react", n_sessions=n_sessions, arrival_rate=rate)
+    sim = Simulator(cfg, ServingConfig(mode=mode, max_concurrent=64,
+                                       chips_per_worker=2, hbm_per_worker=32e9),
+                    sessions)
+    sim.run()
+    peak_blocks = sum(w.mgr.pool.stats.peak_used for w in sim.prefill)
+    stored_blocks = sum(w.mgr.pool.num_blocks - len(w.mgr.pool._free)
+                        for w in sim.prefill)
+    bpb = sim.prefill[0].mgr.bytes_per_block
+    return {"peak_bytes": peak_blocks * bpb, "resident_bytes": stored_blocks * bpb}
+
+
+def run(quick=True, arch="llama31-8b"):
+    cfg = get_config(arch)
+    rows = []
+    for n in (2, 4, 8):
+        b, p = analytic(cfg, n, l_shared=3500, l_unique=128)
+        rows.append({"kind": "analytic", "n_models": n,
+                     "baseline_gb": b / 1e9, "prefillshare_gb": p / 1e9,
+                     "ratio": b / p})
+    # resident (data-holding) pages, not active-refcount peak: prefill pages
+    # are released to CACHED state right after handoff, so refcount peaks
+    # only see in-flight requests; the Eq. 8/9 claim is about RETAINED prefix
+    # state, which is resident (free-list excluded) pages.
+    mb = measured(cfg, "baseline")
+    mp = measured(cfg, "prefillshare")
+    rows.append({"kind": "measured-resident", "n_models": 4,
+                 "baseline_gb": mb["resident_bytes"] / 1e9,
+                 "prefillshare_gb": mp["resident_bytes"] / 1e9,
+                 "ratio": mb["resident_bytes"] / max(mp["resident_bytes"], 1)})
+    return rows
+
+
+def main(quick=True):
+    rows = run(quick)
+    print("kind,n_models,baseline_gb,prefillshare_gb,ratio")
+    for r in rows:
+        print(f"{r['kind']},{r['n_models']},{r['baseline_gb']:.3f},"
+              f"{r['prefillshare_gb']:.3f},{r['ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

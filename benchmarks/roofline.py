@@ -1,0 +1,132 @@
+"""Roofline analysis per (arch × input shape) on the single-pod mesh.
+
+Three terms, per deliverable (g):
+  compute    = FLOPs / (chips × 197 TF/s bf16)
+  memory     = HBM bytes / (chips × 819 GB/s)
+  collective = per-chip collective bytes / (50 GB/s per ICI link)
+
+FLOPs and HBM bytes are analytic (launch/analytic.py — cost_analysis counts
+loop bodies once, see EXPERIMENTS.md §Dry-run); collective bytes come from the
+loop-aware HLO parse stored by the dry-run; per-chip footprint from
+memory_analysis. Emits a markdown table + results/roofline.json and a
+calibration file for the serving cost model.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def load_dryrun(path="results/dryrun.jsonl"):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r["arch"], r["shape"], r.get("mesh", "?"))
+            recs[key] = r
+    return recs
+
+
+def analyze(dryrun_path="results/dryrun.jsonl", mesh="16x16"):
+    sys.path.insert(0, "src")
+    from repro.configs.base import ASSIGNED, INPUT_SHAPES, get_config
+    from repro.launch.analytic import step_analytic
+
+    recs = load_dryrun(dryrun_path)
+    rows = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if "skipped" in r:
+                rows.append({"arch": arch, "shape": shape, "skipped": r["skipped"]})
+                continue
+            if "error" in r:
+                rows.append({"arch": arch, "shape": shape, "error": r["error"]})
+                continue
+            chips = r["chips"]
+            a = step_analytic(cfg, shape)
+            t_c = a["flops"] / (chips * PEAK)
+            t_m = a["hbm_bytes"] / (chips * HBM)
+            coll = r["collectives"]["total"]          # per-chip (post-SPMD shapes)
+            t_x = coll / LINK
+            dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                      key=lambda kv: kv[1])[0]
+            rows.append({
+                "arch": arch, "shape": shape, "chips": chips,
+                "flops": a["flops"], "hbm_bytes": a["hbm_bytes"],
+                "coll_bytes_per_chip": coll,
+                "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+                "dominant": dom,
+                "model_flops": a["model_flops"],
+                "useful_ratio": a["model_flops"] / a["flops"],
+                "step_s_bound": max(t_c, t_m, t_x),
+                "mem_per_chip_gb": (r["memory"]["argument_size_in_bytes"]
+                                    + r["memory"]["temp_size_in_bytes"]
+                                    + r["memory"]["output_size_in_bytes"]) / 1e9,
+                "cost_analysis_flops_bodyonce": r["cost"].get("flops", 0.0),
+                "compile_s": r.get("compile_s", 0),
+            })
+    return rows
+
+
+def markdown(rows) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful(6ND/FLOPs) | mem/chip GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP (sub-quadratic rule) | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR: {r['error'][:40]} "
+                       f"| | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mem_per_chip_gb']:.2f} |")
+    return "\n".join(out)
+
+
+def write_calibration(rows, path="results/calibration.json"):
+    """Per-arch scale factors for the serving cost model."""
+    calib = {}
+    for r in rows:
+        if "error" in r or "skipped" in r:
+            continue
+        calib.setdefault(r["arch"], {})[r["shape"]] = {
+            "step_s_bound": r["step_s_bound"], "chips": r["chips"]}
+    with open(path, "w") as f:
+        json.dump(calib, f, indent=1)
+
+
+def main():
+    rows = analyze()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    write_calibration(rows)
+    print(markdown(rows))
+    done = [r for r in rows if "error" not in r and "skipped" not in r]
+    print(f"\n{len(done)} combos analyzed, "
+          f"{sum(1 for r in rows if 'skipped' in r)} skipped, "
+          f"{sum(1 for r in rows if 'error' in r)} errors")
+
+
+if __name__ == "__main__":
+    main()

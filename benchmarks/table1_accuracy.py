@@ -1,0 +1,67 @@
+"""Paper Tables 1-2: Full-FT vs PrefillShare accuracy parity across domains
+and model sizes (tiny-scale analogues of math/coding/tool-calling).
+
+Table-1 analogue: one base, three domains (math/copy/lookup), Full-FT vs
+cache-conditioned FT, each evaluated in its own serving regime (Full-FT with
+self cache, PrefillShare with the shared base cache).
+Table-2 analogue: same protocol across three model widths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.fig2_sharing import TINY, train_models
+from repro.training import data as D
+from repro.training.trainer import evaluate
+
+
+def run_domain(domain, cfg=TINY, steps=(400, 400)):
+    cfg, spec, base, full, ps = train_models(domain, cfg=cfg,
+                                             pretrain_steps=steps[0],
+                                             ft_steps=steps[1])
+    return {
+        "domain": domain,
+        "base_noft": evaluate(cfg, base, base, domain, seed=9,
+                              share_ratio=1.0, spec=spec, per_token=True),
+        "full_ft_selfcache": evaluate(cfg, full, base, domain, seed=9,
+                                      share_ratio=0.0, spec=spec,
+                                      per_token=True),
+        "full_ft_sharedcache": evaluate(cfg, full, base, domain, seed=9,
+                                        share_ratio=1.0, spec=spec,
+                                        per_token=True),
+        "prefillshare": evaluate(cfg, ps, base, domain, seed=9,
+                                 share_ratio=1.0, spec=spec, per_token=True),
+    }
+
+
+def run(quick=True):
+    steps = (300, 300) if quick else (800, 800)
+    rows = [run_domain(d, steps=steps)
+            for d in (("copy",) if quick else ("math", "copy", "lookup"))]
+    # Table-2 analogue: scale sweep
+    if not quick:
+        for width in (96, 128, 192):
+            cfg = dataclasses.replace(TINY, name=f"tiny-{width}",
+                                      d_model=width, d_ff=3 * width)
+            r = run_domain("copy", cfg=cfg, steps=steps)
+            r["domain"] = f"copy@d{width}"
+            rows.append(r)
+    return rows
+
+
+def main(quick=True):
+    rows = run(quick)
+    cols = ("domain", "base_noft", "full_ft_selfcache", "full_ft_sharedcache",
+            "prefillshare")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--full" not in sys.argv)

@@ -1,0 +1,71 @@
+"""End-to-end driver (deliverable b): serve a small model with batched
+multi-agent requests through the REAL disaggregated engine.
+
+Actual JAX models on CPU: one frozen base prefill worker, three heterogeneous
+decode workers, sessions interleaving agents over a growing shared context —
+incremental (partial) prefill, schema-checked cache handoff, per-invocation
+metrics. This is the paper's Appendix-B.1 pipeline in miniature.
+
+Run:  PYTHONPATH=src python examples/serve_disaggregated.py   (~2 min)
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import LocalDisaggEngine
+from repro.models import init_params
+
+CFG = ModelConfig(name="serve-demo", arch_type="dense", n_layers=3,
+                  d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab_size=64, dtype="float32")
+
+AGENTS = ("planner", "coder", "reviewer")
+
+
+def main():
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    decoders = {a: init_params(CFG, jax.random.PRNGKey(7 + i))
+                for i, a in enumerate(AGENTS)}
+    eng = LocalDisaggEngine(CFG, base, decoders, capacity=512)
+
+    rng = np.random.default_rng(0)
+    n_sessions, turns, gen_len = 4, 2, 8
+    t0 = time.time()
+    total_gen = 0
+    for sid in range(n_sessions):
+        context = list(rng.integers(4, 60, size=48))       # system prompt
+        for turn in range(turns):
+            for agent in AGENTS:
+                context += list(rng.integers(4, 60, size=12))  # obs/delta
+                t1 = time.time()
+                out = eng.invoke(sid, context, agent, gen_tokens=gen_len)
+                ttft = time.time() - t1
+                context += list(out)
+                total_gen += len(out)
+                print(f"session {sid} turn {turn} {agent:9s}: ctx "
+                      f"{len(context):4d} tok, gen {len(out)}, "
+                      f"wall {ttft * 1e3:6.1f}ms")
+        eng.end_session(sid)
+
+    dt = time.time() - t0
+    s = eng.stats
+    print(f"\n== summary ==")
+    print(f"generated {total_gen} tokens in {dt:.1f}s "
+          f"({total_gen / dt:.1f} tok/s on 1 CPU core)")
+    print(f"prefill computed {s.prefill_tokens_computed} tokens, "
+          f"REUSED {s.prefill_tokens_reused} (hit ratio "
+          f"{100 * s.hit_ratio:.1f}%)")
+    print(f"handoffs: {s.handoffs} ({s.handoff_bytes / 1e6:.2f} MB "
+          f"base-cache traffic)")
+    print("every agent decoded from the SAME shared base cache; in the "
+          "baseline each of the 3 models would have re-prefilled the full "
+          "context (3x prefill compute, 3x KV storage).")
+
+
+if __name__ == "__main__":
+    main()

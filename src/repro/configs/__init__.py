@@ -1,0 +1,5 @@
+from repro.configs.base import (
+    ModelConfig, InputShape, INPUT_SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K,
+    LONG_500K, ASSIGNED, get_config, list_configs, register,
+    ATTN, LOCAL_ATTN, RGLRU, SSD,
+)

@@ -1,0 +1,4 @@
+from repro.core.prefillshare import (CacheSchema, base_prefill,
+                                     cache_conditioned_loss, cache_schema,
+                                     full_ft_loss, mix_caches,
+                                     model_fingerprint)

@@ -1,0 +1,80 @@
+"""Beyond-paper: LoRA decode modules under cache-conditioned fine-tuning.
+
+The paper fine-tunes FULL decode modules (N × full model storage on the
+decode pool). A natural extension: keep the decode module = frozen base +
+low-rank adapters, trained with the SAME cache-conditioned objective (Eq. 7).
+If it holds accuracy, the decode pool stores ONE base copy + N tiny adapter
+sets — compounding the paper's memory argument (Eq. 9) on the weight side the
+way PrefillShare already compounds it on the KV side.
+
+Implementation: adapters target the attention projections (wq, wv, wo) and
+are materialized as ``W_eff = W + (alpha/r)·(A @ B)`` right before the decode
+forward — at serving time this merge happens once per model swap, so decode
+kernels are unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TARGETS = ("wq", "wv", "wo")
+
+
+def _is_target(path, targets) -> bool:
+    leafname = str(getattr(path[-1], "key", path[-1]))
+    return leafname in targets
+
+
+def lora_init(key, base_params, *, rank: int = 8,
+              targets=DEFAULT_TARGETS) -> Any:
+    """A/B pairs (A ~ N(0, 1/r), B = 0) for every targeted 2D+ weight."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(base_params)
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2 and _is_target(path, targets):
+            *batch, m, n = leaf.shape
+            ka = jax.random.fold_in(key, i)
+            a = jax.random.normal(ka, (*batch, m, rank), jnp.float32) / rank
+            b = jnp.zeros((*batch, rank, n), jnp.float32)
+            out.append({"A": a.astype(leaf.dtype), "B": b.astype(leaf.dtype)})
+        else:
+            out.append(None)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def lora_apply(base_params, lora_params, *, alpha: float = 16.0,
+               rank: int = 8):
+    """Materialize effective params: W + (alpha/rank) * A @ B."""
+    scale = alpha / rank
+
+    def merge(w, ab):
+        if ab is None:
+            return w
+        delta = jnp.einsum("...mr,...rn->...mn", ab["A"].astype(jnp.float32),
+                           ab["B"].astype(jnp.float32)) * scale
+        return (w.astype(jnp.float32) + delta).astype(w.dtype)
+
+    return jax.tree.map(merge, base_params, lora_params,
+                        is_leaf=lambda x: x is None or (
+                            isinstance(x, dict) and set(x) == {"A", "B"}))
+
+
+def lora_param_count(lora_params) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora_params))
+
+
+def cache_conditioned_lora_loss(cfg, lora_params, base_params, prompt,
+                                target_in, target_out, target_mask, *,
+                                alpha: float = 16.0, rank: int = 8,
+                                share_ratio: float = 1.0, **kw):
+    """Eq. 7 with θ_dec = θ_base + LoRA; gradients flow ONLY to the adapters
+    (θ_base enters both the frozen prefill and the decode trunk, but is a
+    constant w.r.t. the optimizer)."""
+    from repro.core.prefillshare import cache_conditioned_loss
+    dec = lora_apply(jax.lax.stop_gradient(base_params), lora_params,
+                     alpha=alpha, rank=rank)
+    return cache_conditioned_loss(cfg, dec, base_params, prompt, target_in,
+                                  target_out, target_mask,
+                                  share_ratio=share_ratio, **kw)

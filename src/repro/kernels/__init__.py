@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated in
+interpret mode on CPU; see tests/test_kernels.py):
+  flash_prefill  — the shared prefill stage's fused attention
+  paged_decode   — decode attention over the shared paged KV pool
+  paged_write    — prefill -> pool page scatter (the handoff data plane)
+"""
+from repro.kernels.ops import flash_attention, paged_attention
+from repro.kernels.paged_write import paged_write

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: paged decode attention over the shared KV pool.
+
+TPU-native adaptation of vLLM's PagedAttention (DESIGN.md §3): the decode
+worker's KV lives in a paged pool; each sequence owns a block table mapping
+logical pages -> physical pages. PrefillShare hands off *base-model* pages to
+every decode worker, so the pool layout is the cross-model-shared artifact.
+
+The block table + sequence lengths ride in scalar-prefetch (SMEM) via
+``PrefetchScalarGridSpec``, so the K/V BlockSpec index maps dereference the
+page table while the previous page streams HBM->VMEM. Grid iterates
+(batch, kv_head, page); the full GQA query group for a kv head is processed
+together (q block (group, D)), amortizing each K/V page fetch across the
+group — the same trick the prefill kernel uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(block_tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, softcap: float,
+            page: int, npages: int, group: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    live = j * page < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale    # (group, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (group, page), 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _final():
+        o_ref[0, :, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           softcap: float = 0.0, scale: float | None = None,
+                           interpret: bool = False):
+    """Single-token decode attention over a paged KV pool.
+
+    q:            (B, Hq, D) current-step queries
+    k_pages:      (P, page_size, Hkv, D) physical key pool
+    v_pages:      (P, page_size, Hkv, D) physical value pool
+    block_tables: (B, npages) int32 logical->physical page ids
+    lengths:      (B,) int32 valid KV length per sequence
+    returns       (B, Hq, D)
+    """
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    npages = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+
+    # (B, Hkv, group, D): query group per kv head
+    qg = q.reshape(B, Hkv, group, D)
+
+    kernel = functools.partial(_kernel, scale=scale, softcap=softcap,
+                               page=page, npages=npages, group=group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, npages),
+        in_specs=[
+            # q: whole group for (b, h)
+            pl.BlockSpec((1, group, 1, D),
+                         lambda b, h, j, bt, ln: (b, 0, h, 0)),
+            # k/v page: physical page id from the prefetched block table
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, 1, D),
+                               lambda b, h, j, bt, ln: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, group, Hkv, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, lengths, qg.transpose(0, 2, 1, 3), k_pages, v_pages)
+    return out.transpose(0, 2, 1, 3).reshape(B, Hq, D)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def ref_flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, scale: float | None = None):
+    """q: (B,Hq,S,D); k/v: (B,Hkv,T,D) -> (B,Hq,S,D). Full materialized softmax."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, g, S, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def ref_paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                     softcap: float = 0.0, scale: float | None = None):
+    """Gather pages into contiguous KV, then masked softmax attention."""
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    npages = block_tables.shape[1]
+    g = Hq // Hkv
+    scale = D ** -0.5 if scale is None else scale
+
+    k = k_pages[block_tables]            # (B, npages, page, Hkv, D)
+    v = v_pages[block_tables]
+    T = npages * page
+    k = k.reshape(B, T, Hkv, D)
+    v = v.reshape(B, T, Hkv, D)
+
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.arange(T)[None] < lengths[:, None]          # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def ref_paged_write(new_k, new_v, k_pages, v_pages, block_tables, n_valid):
+    """Scatter new KV rows into assigned pages (numpy-style oracle)."""
+    import numpy as np
+    B, S, Hkv, D = new_k.shape
+    page = k_pages.shape[1]
+    npages = S // page
+    ko = np.array(k_pages)
+    vo = np.array(v_pages)
+    nk = np.array(new_k).reshape(B, npages, page, Hkv, D)
+    nv = np.array(new_v).reshape(B, npages, page, Hkv, D)
+    bt = np.array(block_tables)
+    for b in range(B):
+        for j in range(int(n_valid[b])):
+            ko[bt[b, j]] = nk[b, j]
+            vo[bt[b, j]] = nv[b, j]
+    return jnp.asarray(ko), jnp.asarray(vo)

@@ -1,0 +1,120 @@
+"""Paged KV block pool: refcounted physical pages with LRU reuse.
+
+The control plane of PagedAttention adapted for the shared-prefill setting:
+physical pages hold KV produced by the *base* model, so the same page can be
+referenced by requests headed to different decode models. Pages move through
+states: FREE -> ACTIVE (refcount > 0) -> CACHED (refcount 0, retained for
+prefix reuse, LRU-evictable) -> FREE.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+
+class PoolExhausted(Exception):
+    pass
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    evictions: int = 0
+    peak_used: int = 0
+
+
+class BlockPool:
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, -1, -1))
+        self._refcount = [0] * num_blocks
+        self._cached = OrderedDict()          # block_id -> None, LRU order
+        self._evict_cb = None                 # notify index on eviction
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    def set_evict_callback(self, cb):
+        self._evict_cb = cb
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free) + len(self._cached)
+
+    @property
+    def active_count(self) -> int:
+        return self.num_blocks - self.free_count
+
+    def alloc(self, n: int) -> list[int]:
+        """Allocate n fresh blocks (refcount=1), evicting LRU cached blocks
+        if the free list runs dry."""
+        if n > self.free_count:
+            raise PoolExhausted(f"need {n}, have {self.free_count}")
+        out = []
+        for _ in range(n):
+            if not self._free:
+                bid, _ = self._cached.popitem(last=False)  # LRU
+                self.stats.evictions += 1
+                if self._evict_cb:
+                    self._evict_cb(bid)
+                self._free.append(bid)
+            bid = self._free.pop()
+            self._refcount[bid] = 1
+            out.append(bid)
+        self.stats.allocs += n
+        self.stats.peak_used = max(self.stats.peak_used, self.active_count)
+        return out
+
+    def ref(self, block_ids) -> None:
+        """Take a reference on existing blocks (prefix-cache hit)."""
+        for bid in block_ids:
+            if self._refcount[bid] == 0:
+                if bid not in self._cached:
+                    raise ValueError(f"block {bid} is free, cannot ref")
+                del self._cached[bid]
+            self._refcount[bid] += 1
+
+    def unref(self, block_ids) -> None:
+        """Drop a reference; refcount-0 blocks become CACHED (LRU-retained)."""
+        for bid in block_ids:
+            rc = self._refcount[bid]
+            if rc <= 0:
+                raise ValueError(f"block {bid} not active")
+            self._refcount[bid] = rc - 1
+            if rc == 1:
+                self._cached[bid] = None
+                self._cached.move_to_end(bid)
+
+    def touch(self, block_ids) -> None:
+        """Refresh LRU position of cached blocks (on prefix hit)."""
+        for bid in block_ids:
+            if bid in self._cached:
+                self._cached.move_to_end(bid)
+
+    def drop(self, block_ids) -> None:
+        """Hard-free blocks (invalidated, e.g. schema mismatch)."""
+        for bid in block_ids:
+            if bid in self._cached:
+                del self._cached[bid]
+            self._refcount[bid] = 0
+            self._free.append(bid)
+
+    def refcount(self, bid: int) -> int:
+        return self._refcount[bid]
+
+    def check_invariants(self) -> None:
+        """Property-test hook: every block is in exactly one state."""
+        free = set(self._free)
+        cached = set(self._cached)
+        assert not (free & cached), "block both free and cached"
+        for bid in range(self.num_blocks):
+            rc = self._refcount[bid]
+            if bid in free:
+                assert rc == 0, f"free block {bid} has refcount {rc}"
+            elif bid in cached:
+                assert rc == 0, f"cached block {bid} has refcount {rc}"
+            else:
+                assert rc > 0, f"active block {bid} has refcount {rc}"
+        assert len(free) + len(cached) + sum(
+            1 for r in self._refcount if r > 0) == self.num_blocks

@@ -1,0 +1,117 @@
+"""Cache handoff: prefill worker -> decode worker transfer (paper §3.3 step 3).
+
+On the paper's GPU prototype this is vLLM's KV connector (NVLink/PCIe, with
+CPU staging under pressure — Appendix B.2). On TPU the handoff is a
+device-to-device copy over ICI links; the simulator prices it at
+``bytes / (links × link_bw)`` and models the Appendix-B.2 staging penalty when
+the decode side's resident KV exceeds its HBM budget.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core.prefillshare import CacheSchema
+from repro.kvcache.manager import kv_bytes_per_token, state_bytes_per_seq
+
+
+class SchemaMismatch(Exception):
+    """Receiving decoder was not trained against this base prefill module."""
+
+
+@dataclass
+class HandoffPlan:
+    bytes: int
+    seconds: float
+    staged: bool          # True if CPU-staging penalty applied (B.2 behavior)
+
+
+class HandoffChannel:
+    """Costed transfer channel between a prefill and a decode worker."""
+
+    def __init__(self, cfg: ModelConfig, *, link_gbps: float = 50.0,
+                 n_links: int = 1, staging_penalty: float = 4.0):
+        self.cfg = cfg
+        self.bw = link_gbps * 1e9 * n_links
+        self.staging_penalty = staging_penalty
+
+    def plan(self, n_tokens: int, *, decode_hbm_free_bytes: int | None = None
+             ) -> HandoffPlan:
+        b = kv_bytes_per_token(self.cfg) * n_tokens + state_bytes_per_seq(self.cfg)
+        staged = (decode_hbm_free_bytes is not None
+                  and b > max(decode_hbm_free_bytes, 0))
+        secs = b / self.bw * (self.staging_penalty if staged else 1.0)
+        return HandoffPlan(bytes=b, seconds=secs, staged=staged)
+
+    @staticmethod
+    def check(producer: CacheSchema, consumer_expected: CacheSchema) -> None:
+        if not producer.compatible_with(consumer_expected):
+            raise SchemaMismatch(
+                f"cache from base {producer.base_model_id} cannot feed a "
+                f"decoder trained against {consumer_expected.base_model_id}")
+
+
+def transfer_cache(cache, device=None):
+    """Real-engine path: move a cache pytree (used by the small-scale engine
+    integration tests; a single-host copy here, jax.device_put cross-device
+    on multi-chip runtimes)."""
+    import jax
+    if device is None:
+        return jax.tree.map(lambda x: x + 0, cache)   # materialize a copy
+    return jax.device_put(cache, device)
+
+
+# ----------------------------------------------------------------------
+# Beyond-paper: int8 handoff compression.
+# The shared cache crosses the prefill->decode link on EVERY model switch;
+# symmetric per-channel int8 halves the wire bytes (vs bf16). Decode-side
+# dequantizes into its resident cache. Quality validated in
+# tests/test_handoff_quant.py (cache-conditioned decode is tolerant to the
+# quantization noise: logits drift < 1e-2 on the tiny model).
+
+
+def quantize_cache(cache):
+    """KV leaves (float, ndim>=3) -> {'q': int8, 'scale': f32 per-channel}."""
+    import jax
+    import jax.numpy as jnp
+
+    def q(x):
+        if not hasattr(x, "dtype") or not jnp.issubdtype(x.dtype, jnp.floating) \
+                or x.ndim < 3:
+            return x
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-2, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        qv = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return {"q": qv.astype(jnp.int8), "scale": scale.astype(jnp.float32),
+                "dtype": str(x.dtype)}
+
+    return jax.tree.map(q, cache)
+
+
+def dequantize_cache(qcache):
+    import jax
+    import jax.numpy as jnp
+
+    def dq(x):
+        if isinstance(x, dict) and set(x) == {"q", "scale", "dtype"}:
+            return (x["q"].astype(jnp.float32) * x["scale"]).astype(x["dtype"])
+        return x
+
+    return jax.tree.map(dq, qcache,
+                        is_leaf=lambda x: isinstance(x, dict)
+                        and set(x) == {"q", "scale", "dtype"})
+
+
+def quantized_bytes(cache) -> int:
+    """Wire bytes of the int8-compressed cache (payload + scales)."""
+    import jax
+    import jax.numpy as jnp
+    total = 0
+    for leaf in jax.tree.leaves(cache):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating) \
+                and leaf.ndim >= 3:
+            total += leaf.size                        # int8 payload
+            total += (leaf.size // leaf.shape[-2]) * 4  # scales
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

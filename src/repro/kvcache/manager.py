@@ -1,0 +1,116 @@
+"""CacheManager: paged pool + prefix index + hit accounting for one worker.
+
+In the BASELINE deployment each (model, prefill worker) pair owns a manager —
+N models over the same session context hold N copies of every prefix page.
+Under PrefillShare a single manager serves ALL decode models because every
+page was produced by the shared frozen base model (cache schema compatible by
+construction), which is exactly the paper's Eq. 8 -> Eq. 9 memory change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, SSD, ModelConfig
+from repro.kvcache.blocks import BlockPool, PoolExhausted
+from repro.kvcache.radix import PrefixIndex
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Bytes of sequence state appended per token (KV for attn layers)."""
+    per = 0
+    for kind in cfg.layer_kinds():
+        if kind == ATTN:
+            per += 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+        elif kind == LOCAL_ATTN:
+            per += 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes  # window-capped overall
+    if cfg.is_encdec:
+        per += 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes  # decoder self-KV
+    return per
+
+
+def state_bytes_per_seq(cfg: ModelConfig, dtype_bytes: int = 4) -> int:
+    """Constant-size per-sequence state (SSM/RG-LRU/conv states)."""
+    total = 0
+    d_in = cfg.ssm_expand * cfg.d_model
+    for kind in cfg.layer_kinds():
+        if kind == SSD:
+            nh = d_in // cfg.ssm_head_dim
+            total += nh * cfg.ssm_head_dim * cfg.ssm_state * dtype_bytes
+            total += (cfg.conv_width - 1) * (d_in + 2 * cfg.ssm_state) * dtype_bytes
+        elif kind == RGLRU:
+            w = cfg.rglru_width or cfg.d_model
+            total += w * dtype_bytes + (cfg.conv_width - 1) * w * dtype_bytes
+    return total
+
+
+@dataclass
+class CacheStats:
+    lookups: int = 0
+    hit_tokens: int = 0
+    total_tokens: int = 0
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hit_tokens / self.total_tokens if self.total_tokens else 0.0
+
+
+@dataclass
+class Allocation:
+    cached_blocks: list
+    new_blocks: list
+    cached_tokens: int
+    total_tokens: int
+
+    @property
+    def blocks(self):
+        return self.cached_blocks + self.new_blocks
+
+
+class CacheManager:
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int = 16):
+        self.cfg = cfg
+        self.pool = BlockPool(num_blocks, block_size)
+        self.index = PrefixIndex(block_size)
+        self.pool.set_evict_callback(self.index.remove_block)
+        self.stats = CacheStats()
+        self.bytes_per_block = kv_bytes_per_token(cfg) * block_size
+
+    # ------------------------------------------------------------------
+    def acquire(self, tokens) -> Allocation:
+        """Match the longest cached prefix, allocate pages for the rest.
+
+        Raises PoolExhausted if the pool cannot host the request (admission
+        control upstream should prevent this)."""
+        bs = self.pool.block_size
+        n_tok = len(tokens)
+        cached_blocks, cached_tokens = self.index.match(tokens)
+        # take refs before any allocation can evict them
+        self.pool.ref(cached_blocks)
+        self.pool.touch(cached_blocks)
+        n_blocks_total = (n_tok + bs - 1) // bs
+        need = n_blocks_total - len(cached_blocks)
+        try:
+            new_blocks = self.pool.alloc(need)
+        except PoolExhausted:
+            self.pool.unref(cached_blocks)
+            raise
+        self.stats.lookups += 1
+        self.stats.hit_tokens += cached_tokens
+        self.stats.total_tokens += n_tok
+        return Allocation(cached_blocks, new_blocks, cached_tokens, n_tok)
+
+    def commit(self, tokens, alloc: Allocation) -> None:
+        """After prefill fills the new pages, publish them for prefix reuse."""
+        self.index.insert(tokens, alloc.blocks)
+
+    def release(self, alloc: Allocation) -> None:
+        self.pool.unref(alloc.blocks)
+
+    # ------------------------------------------------------------------
+    @property
+    def used_bytes(self) -> int:
+        return self.pool.active_count * self.bytes_per_block
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.pool.num_blocks * self.bytes_per_block

@@ -1,0 +1,108 @@
+"""Block-granular radix/prefix index over token sequences.
+
+SGLang-RadixAttention-style prefix reuse at page granularity: each node owns
+one physical block and is keyed by that block's token content, chained from
+its parent (equivalent to vLLM's chained block hashing, but kept as an
+explicit tree so eviction can walk leaves first and subtree reuse is O(depth)).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class Node:
+    key: tuple                    # the block's tokens
+    block_id: int
+    parent: Optional["Node"]
+    children: dict = field(default_factory=dict)
+    seq: int = 0                  # LRU clock
+
+    @property
+    def is_leaf(self):
+        return not self.children
+
+
+class PrefixIndex:
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.root = Node(key=(), block_id=-1, parent=None)
+        self._by_block: dict[int, Node] = {}
+        self._clock = 0
+
+    # ------------------------------------------------------------------
+    def match(self, tokens) -> tuple[list[int], int]:
+        """Longest cached prefix: returns (block_ids, n_tokens_matched)."""
+        bs = self.block_size
+        node = self.root
+        blocks = []
+        self._clock += 1
+        for i in range(0, len(tokens) - len(tokens) % bs, bs):
+            key = tuple(tokens[i:i + bs])
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.seq = self._clock
+            blocks.append(child.block_id)
+            node = child
+        return blocks, len(blocks) * bs
+
+    def insert(self, tokens, block_ids) -> int:
+        """Register fully-filled blocks for ``tokens``; returns #new nodes.
+        ``block_ids[i]`` holds tokens[i*bs:(i+1)*bs]."""
+        bs = self.block_size
+        node = self.root
+        new = 0
+        self._clock += 1
+        for i, bid in enumerate(block_ids):
+            seg = tuple(tokens[i * bs:(i + 1) * bs])
+            if len(seg) < bs:
+                break                         # partial block: not indexable
+            child = node.children.get(seg)
+            if child is None:
+                child = Node(key=seg, block_id=bid, parent=node)
+                node.children[seg] = child
+                self._by_block[bid] = child
+                new += 1
+            child.seq = self._clock
+            node = child
+        return new
+
+    def remove_block(self, block_id: int) -> None:
+        """Pool evicted this block: drop its node (subtree must re-prefill).
+
+        Interior-node eviction orphans descendants; we drop the whole subtree
+        (matching vLLM semantics where a chain is broken by a missing link)."""
+        node = self._by_block.pop(block_id, None)
+        if node is None:
+            return
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+        # unregister descendants
+        stack = list(node.children.values())
+        while stack:
+            n = stack.pop()
+            self._by_block.pop(n.block_id, None)
+            stack.extend(n.children.values())
+        node.children.clear()
+
+    def lru_leaves(self, n: int) -> list[int]:
+        """The n least-recently-used leaf blocks (eviction candidates)."""
+        leaves = [nd for nd in self._by_block.values() if nd.is_leaf]
+        leaves.sort(key=lambda nd: nd.seq)
+        return [nd.block_id for nd in leaves[:n]]
+
+    def __len__(self):
+        return len(self._by_block)
+
+    def check_invariants(self):
+        for bid, node in self._by_block.items():
+            assert node.block_id == bid
+            assert node.parent is not None
+            assert node.parent.children.get(node.key) is node
+            # every ancestor is registered (no orphan chains)
+            p = node.parent
+            while p is not self.root:
+                assert p.block_id in self._by_block
+                p = p.parent

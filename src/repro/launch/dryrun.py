@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) combo.
+
+For each combination this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the step function + ShapeDtypeStruct inputs (no allocation),
+  3. jit(...).lower(...).compile()  — proving the sharding config is coherent,
+  4. records memory_analysis / cost_analysis / HLO collective bytes to JSONL
+     (consumed by benchmarks/roofline.py and EXPERIMENTS.md).
+
+Resumable: combos already in the output file are skipped.
+
+Usage:
+  python -m repro.launch.dryrun                       # all combos, single-pod
+  python -m repro.launch.dryrun --multi-pod           # all combos, 2 pods
+  python -m repro.launch.dryrun --arch gemma2-27b --shape decode_32k
+"""
+
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ASSIGNED, INPUT_SHAPES, get_config
+from repro.launch.hloanalysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build
+
+SKIP_LONG = "long_500k requires sub-quadratic attention (DESIGN.md §4)"
+
+
+def combos(archs, shapes):
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            if s == "long_500k" and not cfg.long_context_ok:
+                yield a, s, SKIP_LONG
+            else:
+                yield a, s, None
+
+
+def run_one(arch: str, shape: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "chips": mesh.devices.size}
+    t0 = time.time()
+    with mesh:
+        b = build(cfg, shape, mesh)
+        jitted = jax.jit(b["fn"], in_shardings=b["in_shardings"],
+                         donate_argnums=b.get("donate", ()))
+        lowered = jitted.lower(*b["args"])
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k, 0) or 0) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")}
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and (
+                           "flops" in k or "bytes" in k or k == "optimal_seconds")}
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_len"] = len(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if "error" not in r:
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    n_ok = n_skip = n_fail = 0
+    with open(args.out, "a") as f:
+        for arch, shape, skip in combos(archs, shapes):
+            key = (arch, shape, mesh_tag)
+            if key in done:
+                print(f"[dryrun] {arch} x {shape} x {mesh_tag}: cached")
+                n_ok += 1
+                continue
+            if skip:
+                print(f"[dryrun] {arch} x {shape}: SKIP ({skip})")
+                f.write(json.dumps({"arch": arch, "shape": shape,
+                                    "mesh": mesh_tag, "skipped": skip}) + "\n")
+                f.flush()
+                n_skip += 1
+                continue
+            print(f"[dryrun] {arch} x {shape} x {mesh_tag} ...", flush=True)
+            try:
+                rec = run_one(arch, shape, args.multi_pod)
+                n_ok += 1
+                per_chip = rec["memory"]["argument_size_in_bytes"]  # already per-chip
+                print(f"  ok: lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                      f"args/chip {per_chip/1e9:.2f}GB "
+                      f"flops {rec['cost'].get('flops', 0):.3g} "
+                      f"coll {rec['collectives']['total']/1e9:.2f}GB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                n_fail += 1
+                print(f"  FAIL: {rec['error']}", flush=True)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

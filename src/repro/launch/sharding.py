@@ -1,0 +1,153 @@
+"""Rule-based sharding policy (DESIGN.md §5).
+
+Weights: Megatron-style tensor parallelism on the ``model`` axis — column-
+parallel input projections (wi/wu/wq/wk/wv: output-feature dim on ``model``),
+row-parallel output projections (wo/out_proj: reduction dim on ``model``) —
+plus FSDP/ZeRO-style sharding of the remaining large dim over ``data`` so
+grok-1-scale optimizer state fits. Every rule is divisibility-checked against
+the actual mesh; anything that doesn't divide falls back gracefully
+(non-divisible head counts like 24H or 40 experts over a 16-way axis never
+produce uneven shards).
+
+Sequence state (KV caches / SSM states): batch over ``data`` when divisible,
+else the KV sequence dim (long_500k's batch=1 case) — context parallelism for
+the half-megatoken cache; heads (or head_dim) over ``model``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+ROW_PARALLEL = ("wo", "out_proj", "out")   # reduction dim sharded on model
+
+
+def param_pspec(name: str, shape, data: int, model: int) -> P:
+    nd = len(shape)
+    if nd <= 1:
+        return P()
+    leaf = name.rsplit("/", 1)[-1]
+    axes = [None] * nd
+    # embeddings: vocab on model (keeps chunked-CE logits vocab-sharded)
+    if leaf in ("embed", "unembed"):
+        if shape[0] % model == 0:
+            axes[0] = "model"
+            if shape[1] % data == 0:
+                axes[1] = "data"
+        elif shape[1] % model == 0:
+            axes[1] = "model"
+        return P(*axes)
+    row = any(leaf == r or leaf.endswith(r) for r in ROW_PARALLEL)
+    prefer, other = (nd - 2, nd - 1) if row else (nd - 1, nd - 2)
+    if shape[prefer] % model == 0:
+        axes[prefer] = "model"
+    elif shape[other] % model == 0:
+        axes[other] = "model"
+        prefer, other = other, prefer
+    if axes[other] is None and shape[other] % data == 0:
+        axes[other] = "data"
+    return P(*axes)
+
+
+def cache_pspec(name: str, shape, data: int, model: int, *,
+                stacked: bool, decode: bool = False) -> P:
+    nd = len(shape)
+    axes = [None] * nd
+    off = 1 if stacked else 0      # leading layer-group dim never sharded
+    leaf = name.rsplit("/", 1)[-1]
+    dims = list(range(off, nd))
+    if not dims:
+        return P()
+    b = dims[0]
+    if shape[b] % data == 0 and shape[b] > 1:
+        axes[b] = "data"
+    elif len(dims) > 1 and leaf in ("k", "v", "kpos") and shape[dims[1]] % data == 0:
+        axes[dims[1]] = "data"     # context parallelism (batch=1 long decode)
+    if decode and leaf in ("k", "v", "kpos") and len(dims) > 1:
+        # flash-decode layout: shard the KV *sequence* on `model`. One query
+        # token contracts over seq -> partial-softmax combines are tiny
+        # all-reduces, vs all-gathering the whole cache under feature/head
+        # sharding (3.3GB/step on internlm2 decode_32k; EXPERIMENTS §Perf).
+        s = dims[1]
+        if axes[s] is None and shape[s] % model == 0:
+            axes[s] = "model"
+            return P(*axes)
+        if axes[s] == "data" and shape[s] % (data * model) == 0:
+            axes[s] = ("data", "model")
+            return P(*axes)
+    # model axis: try trailing dims (heads, then head_dim/state)
+    for d in (dims[2:] if leaf in ("k", "v") else dims[1:]):
+        if axes[d] is None and shape[d] % model == 0 and shape[d] >= model:
+            axes[d] = "model"
+            break
+    return P(*axes)
+
+
+def _expand_data(spec: P, mesh) -> P:
+    """Replace 'data' with the composite (pod, data) axes on multi-pod meshes."""
+    das = data_axes(mesh)
+    if das == ("data",):
+        return spec
+    return P(*[das if a == "data" else a for a in spec])
+
+
+def _total_data(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= axis_size(mesh, a)
+    return n
+
+
+def params_shardings(param_shapes, mesh, *, fsdp: bool = True):
+    """Pytree of NamedSharding for a params (or optimizer-state) pytree.
+
+    fsdp=False drops the ``data``-axis shard on weights (pure tensor
+    parallelism, weights replicated across data rows). Inference steps use
+    this when the TP-sharded weights fit per-chip: FSDP's per-layer weight
+    all-gather dominated decode collectives (3.4 of 3.6 GB/step on
+    internlm2-1.8b decode_32k — EXPERIMENTS.md §Perf iteration 3)."""
+    model = axis_size(mesh, "model")
+    data = _total_data(mesh)
+
+    def one(path, leaf):
+        spec = param_pspec(_path_str(path), leaf.shape, data, model)
+        if not fsdp:
+            spec = P(*[a if a != "data" else None for a in spec])
+        return NamedSharding(mesh, _expand_data(spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+def cache_shardings(cache_shapes, mesh, *, decode: bool = False):
+    model = axis_size(mesh, "model")
+    data = _total_data(mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        stacked = name.startswith("groups")
+        spec = cache_pspec(name, leaf.shape, data, model, stacked=stacked,
+                           decode=decode)
+        return NamedSharding(mesh, _expand_data(spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def batch_sharding(shape, mesh, *, axes: str = "data"):
+    """(B, ...) arrays: batch over the data axes (axes="data") or over the
+    WHOLE mesh (axes="all" — pure-FSDP training, no tensor parallelism)."""
+    names = (data_axes(mesh) + ("model",)) if axes == "all" else data_axes(mesh)
+    n = 1
+    for a in names:
+        n *= axis_size(mesh, a)
+    spec = P()
+    if shape and shape[0] % n == 0 and shape[0] > 1:
+        spec = P(names, *([None] * (len(shape) - 1)))
+    elif shape and shape[0] % _total_data(mesh) == 0 and shape[0] > 1:
+        spec = P(data_axes(mesh), *([None] * (len(shape) - 1)))
+    return NamedSharding(mesh, spec)

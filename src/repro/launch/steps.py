@@ -1,0 +1,192 @@
+"""Step functions + abstract input specs for every (arch × input-shape) combo.
+
+Shapes (assigned):
+  train_4k     -> train_step   (fwd+bwd+AdamW, remat, chunked CE)
+  prefill_32k  -> prefill_step (fill a cache of seq_len)
+  decode_32k   -> serve_step   (ONE token against a seq_len cache)
+  long_500k    -> serve_step   (batch=1, half-megatoken cache)
+
+Modality conventions (DESIGN.md deviations):
+  audio (enc-dec): seq_len splits 50/50 into encoder frames and decoder tokens;
+  vlm: n_prefix_embeds patch embeddings + (seq_len - n_prefix) text tokens.
+
+Everything returns ShapeDtypeStructs — no host allocation; the dry-run lowers
+and compiles against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.launch.mesh import axis_size, data_axes
+from repro.launch.sharding import (batch_sharding, cache_shardings,
+                                   params_shardings)
+from repro.models import encode, forward, init_cache, init_params
+from repro.models.model import train_loss
+from repro.training.optim import AdamW, apply_updates
+
+
+# ======================================================================
+# step functions
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW):
+    def step(params, opt_state, batch):
+        def lf(p):
+            loss, _ = train_loss(
+                cfg, p, batch["tokens"], batch["targets"], batch["mask"],
+                prefix_embeds=batch.get("prefix_embeds"),
+                enc_embeds=batch.get("enc_embeds"), remat=True)
+            return loss
+        loss, grads = jax.value_and_grad(lf)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, tokens, cache, pos, prefix_embeds=None, enc_embeds=None):
+        enc_out = None
+        if cfg.is_encdec and enc_embeds is not None:
+            enc_out = encode(cfg, params, enc_embeds)
+        logits, cache, _ = forward(cfg, params, tokens, cache=cache, pos=pos,
+                                   prefix_embeds=prefix_embeds,
+                                   enc_out=enc_out)
+        return logits, cache
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, token, cache, pos):
+        logits, cache, _ = forward(cfg, params, token, cache=cache, pos=pos)
+        return logits, cache
+    return step
+
+
+# ======================================================================
+# abstract input specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_structs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def build(cfg: ModelConfig, shape_name: str, mesh, *,
+          moment_dtype=jnp.bfloat16, activation_policy: str | None = None):
+    """Returns dict(fn, args, in_shardings) ready for jit().lower()."""
+    import os as _os
+
+    from jax.sharding import PartitionSpec as _P
+
+    from repro.models import model as _model_mod
+
+    shp = INPUT_SHAPES[shape_name]
+    # Activation-sharding policy at block boundaries (§Perf iterations 5-6):
+    #   seqpar (train/prefill): Megatron-SP style — residual stream sharded
+    #     (batch on data, SEQUENCE on model). chatglm train_4k: collective
+    #     1479->787 GB/chip and temp 73->10.5 GB/chip (fits v5e HBM).
+    #   batch (decode): S=1 can't shard; pin batch only.
+    # MoE routing (top-k/scatter over the token axis) fights a model-sharded
+    # sequence: granite-moe prefill_32k measured seqpar 6485 / none 2439 /
+    # batch 810 GB-per-chip collectives (§Perf iteration 8) -> batch for MoE.
+    default = ("batch" if (shp.kind == "decode" or cfg.is_moe) else "seqpar")
+    policy = activation_policy or _os.environ.get("REPRO_ACT_POLICY", default)
+    das = data_axes(mesh)
+    from repro.models import attention as _attn_mod
+    if policy == "batch":
+        _model_mod.ACTIVATION_SPEC = _P(das, None, None)
+    elif policy == "seqpar":
+        _model_mod.ACTIVATION_SPEC = _P(das, "model", None)
+    else:
+        _model_mod.ACTIVATION_SPEC = None
+    # hoist flash KV gathers out of the q-chunk loop (prefill/train only;
+    # decode's KV stays sequence-sharded for the flash-decode layout)
+    if shp.kind in ("prefill", "train") and policy != "none":
+        _attn_mod.FLASH_KV_SPEC = _P(None, das, None, None, None)
+    else:
+        _attn_mod.FLASH_KV_SPEC = None
+    B, S = shp.global_batch, shp.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    p_structs = param_structs(cfg)
+    # Inference: pure TP (replicate weights over data) when the TP shard fits
+    # per chip — FSDP's per-layer weight all-gather dominates decode traffic.
+    # Training (and grok-1-scale inference) keeps FSDP so optimizer state fits.
+    from repro.launch.mesh import axis_size
+    tp_bytes = 2 * cfg.param_count() / axis_size(mesh, "model")
+    infer_fsdp = tp_bytes > 10e9
+    p_shard = params_shardings(
+        p_structs, mesh, fsdp=(shp.kind == "train" or infer_fsdp))
+    bs = lambda s: batch_sharding(s, mesh)
+    rep = NamedSharding(mesh, P())
+
+    npfx = cfg.n_prefix_embeds if cfg.input_mode == "mixed" else 0
+    enc_len = S // 2 if cfg.is_encdec else 0
+    dec_len = S // 2 if cfg.is_encdec else S - npfx
+
+    if shp.kind == "train":
+        opt = AdamW(1e-4, moment_dtype=moment_dtype, weight_decay=0.1)
+        o_structs = jax.eval_shape(opt.init, p_structs)
+        # moments inherit the param rules (leaf names match); scalars replicate
+        o_shard = params_shardings(o_structs, mesh)
+        # NOTE (§Perf iter, REFUTED): sharding the batch over the whole mesh
+        # ("pure FSDP", no TP) degenerated — the embedding gather can't keep a
+        # 256-way batch shard, GSPMD replicated the batch and the MLP
+        # all-reduces grew to full-batch f32 tensors. Kept on "data" axes;
+        # activation sharding is pinned via with_sharding_constraint instead.
+        bs = lambda s: batch_sharding(s, mesh, axes="data")  # noqa: E731
+        batch = {"tokens": _sds((B, dec_len), jnp.int32),
+                 "targets": _sds((B, dec_len), jnp.int32),
+                 "mask": _sds((B, dec_len), jnp.float32)}
+        bshard = {k: bs(v.shape) for k, v in batch.items()}
+        if npfx:
+            batch["prefix_embeds"] = _sds((B, npfx, cfg.d_model), dt)
+            bshard["prefix_embeds"] = bs(batch["prefix_embeds"].shape)
+        if cfg.is_encdec:
+            batch["enc_embeds"] = _sds((B, enc_len, cfg.d_model), dt)
+            bshard["enc_embeds"] = bs(batch["enc_embeds"].shape)
+        fn = make_train_step(cfg, opt)
+        return {"fn": fn,
+                "args": (p_structs, o_structs, batch),
+                "in_shardings": (p_shard, o_shard, bshard),
+                "donate": (0, 1)}     # params/opt_state update in place
+
+    cache_len = (dec_len + npfx) if shp.kind == "prefill" else (
+        S // 2 if cfg.is_encdec else S)
+    c_structs = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, int(cache_len),
+                          enc_len=enc_len))
+    c_shard = cache_shardings(c_structs, mesh, decode=(shp.kind == "decode"))
+    pos = _sds((B,), jnp.int32)
+
+    if shp.kind == "prefill":
+        args = [p_structs, _sds((B, dec_len), jnp.int32), c_structs, pos]
+        shards = [p_shard, bs((B, dec_len)), c_shard, bs((B,))]
+        if npfx:
+            args.append(_sds((B, npfx, cfg.d_model), dt))
+            shards.append(bs((B, npfx, cfg.d_model)))
+        elif cfg.is_encdec:
+            args.append(None)
+            shards.append(None)
+        if cfg.is_encdec:
+            args.append(_sds((B, enc_len, cfg.d_model), dt))
+            shards.append(bs((B, enc_len, cfg.d_model)))
+        fn = make_prefill_step(cfg)
+        return {"fn": fn, "args": tuple(args), "in_shardings": tuple(shards),
+                "donate": (2,)}       # cache filled in place
+
+    # decode
+    fn = make_serve_step(cfg)
+    args = (p_structs, _sds((B, 1), jnp.int32), c_structs, pos)
+    shards = (p_shard, bs((B, 1)), c_shard, bs((B,)))
+    return {"fn": fn, "args": args, "in_shardings": shards, "donate": (2,)}

@@ -1,0 +1,2 @@
+from repro.models.model import (encode, forward, init_cache, init_params,
+                                train_loss)

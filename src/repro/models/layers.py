@@ -1,0 +1,57 @@
+"""Primitive layers: init helpers, RMSNorm, embedding, gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish), matching common LLM inits."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return jnp.zeros((dim,), dtype)  # stored as (scale - 1), gemma-style
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), dtype=dtype),      # gate
+        "wu": dense_init(k2, (d_model, d_ff), dtype=dtype),      # up
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x):
+    """SwiGLU gated MLP."""
+    g = jnp.einsum("...d,df->...f", x, p["wi"])
+    u = jnp.einsum("...d,df->...f", x, p["wu"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return dense_init(key, (vocab, d_model), scale=0.02, dtype=dtype)
+
+
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x, table, softcap: float | None = None):
+    logits = jnp.einsum("...d,vd->...v", x, table).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

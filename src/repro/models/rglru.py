@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Temporal-mixing block: x -> {linear gate branch (GeLU), linear recurrent
+branch -> causal conv -> RG-LRU} -> elementwise product -> out proj.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a h_in + b_a);  i_t = sigmoid(W_x h_in + b_x)
+    a_t = exp(-c * softplus(Λ) * r_t)          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Linear recurrence h_t = a_t h_{t-1} + b_t is evaluated with
+``lax.associative_scan`` for prefill (O(log S) depth) and a single fused step
+for decode. The recurrent state (+ conv state) is the shared "sequence state"
+for PrefillShare on this hybrid architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def rglru_width(cfg):
+    return cfg.rglru_width or cfg.d_model
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_x": dense_init(ks[0], (d, w), dtype=dtype),     # recurrent branch
+        "in_gate": dense_init(ks[1], (d, w), dtype=dtype),  # gelu gate branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], (w, w), scale=0.02, dtype=dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[4], (w, w), scale=0.02, dtype=dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 0.65, jnp.float32),           # softplus(Λ) init ~ decay 0.9^c
+        "out": dense_init(jax.random.fold_in(key, 7), (w, d), dtype=dtype),
+    }
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    w = rglru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def _conv(x, w, b, state):
+    W = w.shape[0]
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return out + b, new_state
+
+
+def rglru_apply(p, x, cfg, cache=None):
+    """x: (B,S,D) -> (out, new_cache)."""
+    B, S, D = x.shape
+    w = rglru_width(cfg)
+    xr = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["in_gate"]))
+
+    conv_state = cache["conv"] if cache is not None else jnp.zeros(
+        (B, cfg.conv_width - 1, w), x.dtype)
+    xc, new_conv = _conv(xr, p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r                  # (B,S,W), negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32))
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, w), jnp.float32)
+    if S == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        # fold initial state into the first step, then associative scan
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, br + ar * bl
+
+        _, hs = lax.associative_scan(combine, (a, b), axis=1)
+        new_h = hs[:, -1]
+
+    out = jnp.einsum("bsw,wd->bsd", (hs.astype(x.dtype) * gate), p["out"])
+    return out, {"h": new_h, "conv": new_conv}

@@ -1,0 +1,35 @@
+"""Rotary position embeddings: full (llama/neox), partial (ChatGLM 2d-style), none."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rotate(x, positions, theta: float):
+    """Apply RoPE over the last dim of ``x`` (..., S, D) with ``positions`` (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x, positions, *, style: str = "full", theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) absolute token positions."""
+    if style == "none":
+        return x
+    pos = positions[:, :, None]  # broadcast over heads
+    xt = jnp.swapaxes(x, 1, 2)   # (B, H, S, D)
+    pos = positions[:, None, :]  # (B, 1, S)
+    if style == "full":
+        out = _rotate(xt, pos, theta)
+    elif style == "partial":
+        # ChatGLM-style: rotary on the first half of head dims, pass-through rest.
+        d = xt.shape[-1]
+        rot, keep = xt[..., : d // 2], xt[..., d // 2 :]
+        out = jnp.concatenate([_rotate(rot, pos, theta), keep], axis=-1)
+    else:
+        raise ValueError(f"unknown rope style {style!r}")
+    return jnp.swapaxes(out, 1, 2)

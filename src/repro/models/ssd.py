@@ -1,0 +1,169 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked algorithm: intra-chunk quadratic (attention-like) term + inter-chunk
+state recurrence carried by ``lax.scan`` — O(S·Q) compute, O(1) state. The
+prefill-produced state (ssm_state, conv_state) is this architecture's
+"sequence state" for PrefillShare sharing (DESIGN.md §4): prefill emits it,
+decode consumes it, exactly like a KV cache but constant-size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+
+
+def ssd_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssd_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in, nh, pdim, n = ssd_dims(cfg)
+    conv_dim = d_in + 2 * n          # conv over concat(x, B, C), n_groups=1
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (d_in), x (d_in), B (n), C (n), dt (nh)]
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * n + nh), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((d_in,), dtype),  # gated RMSNorm pre out_proj
+        "out_proj": dense_init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def init_ssd_cache(cfg, batch, dtype):
+    d_in, nh, pdim, n = ssd_dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, nh, pdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state):
+    """x: (B,S,C), w: (W,C) depthwise. conv_state: (B,W-1,C) left context."""
+    W = w.shape[0]
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else conv_state
+    return jax.nn.silu(out + b), new_state
+
+
+def _segsum(a):
+    """a: (..., L) -> cumulative sums a_i+..+a_j for j<i, (..., L, L) lower-tri."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]   # diff[i, j] = a_{j+1} + .. + a_i
+    mask = jnp.tril(jnp.ones((L, L), bool))      # j <= i; diagonal = 0 decay
+
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B_, C_, init_state, chunk: int = 64):
+    """Chunked SSD.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) positive step sizes; A: (H,) negative;
+    B_, C_: (B,S,N) (single group, broadcast over heads); init_state (B,H,P,N).
+    Returns (y (B,S,H,P), final_state).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = chunk
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    a = dt * A[None, None, :]                       # (B,S,H) log-decay per step
+    xc = x.reshape(Bb, nc, Q, H, P)
+    ac = a.reshape(Bb, nc, Q, H).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B_.reshape(Bb, nc, Q, N)
+    Cc = C_.reshape(Bb, nc, Q, N)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                 # (B,H,nc,Q)
+
+    # intra-chunk (diagonal) term: attention-like with decay kernel
+    L = jnp.exp(_segsum(ac))                        # (B,H,nc,Q,Q)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp,bcsh->bclhp",
+                        scores, L, xc, dtc)
+
+    # per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,nc,Q)
+    states = jnp.einsum("bcln,bhcl,bclh,bclhp->bchpn", Bc, decay_states, dtc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])            # (B,H,nc)
+
+    def step(carry, xs):
+        dec, st_chunk = xs                           # per-chunk
+        new = carry * dec[..., None, None] + st_chunk
+        return new, carry                            # emit state *entering* the chunk
+
+    sts = jnp.moveaxis(states, 1, 0)                 # (nc,B,H,P,N)
+    decs = jnp.moveaxis(chunk_decay, -1, 0)          # (nc,B,H)
+    final_state, entry_states = lax.scan(step, init_state, (decs, sts))
+    entry_states = jnp.moveaxis(entry_states, 0, 1)  # (B,nc,H,P,N)
+
+    # contribution of the entering state to each position in the chunk
+    state_decay = jnp.exp(a_cum)                     # (B,H,nc,Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, entry_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def ssd_apply(p, x, cfg, cache=None):
+    """x: (B,S,D) -> (out, new_cache). Handles prefill, partial prefill, decode."""
+    Bb, S, D = x.shape
+    d_in, nh, pdim, n = ssd_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else jnp.zeros(
+        (Bb, cfg.conv_width - 1, d_in + 2 * n), x.dtype)
+    conv_in = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xin, Bmat, Cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    xh = xin.reshape(Bb, S, nh, pdim).astype(jnp.float32)
+    init_state = cache["ssm"] if cache is not None else jnp.zeros(
+        (Bb, nh, pdim, n), jnp.float32)
+
+    if S == 1:
+        # single-step recurrence (decode)
+        da = jnp.exp(dt[:, 0, :] * A[None])                       # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0],
+                         Bmat[:, 0].astype(jnp.float32))
+        state = init_state * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), state)
+        y = y[:, None]                                            # (B,1,H,P)
+        final_state = state
+    else:
+        y, final_state = ssd_scan(xh, dt, A,
+                                  Bmat.astype(jnp.float32),
+                                  Cmat.astype(jnp.float32), init_state)
+
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(Bb, S, d_in).astype(x.dtype)
+
+    # gated RMSNorm (mamba2 norm before out_proj)
+    g = jax.nn.silu(z)
+    yf = (y * g).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = (yf * lax.rsqrt(var + cfg.norm_eps) *
+          (1.0 + p["norm_w"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", yn, p["out_proj"])
+    new_cache = {"ssm": final_state, "conv": new_conv}
+    return out, new_cache

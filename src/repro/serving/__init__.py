@@ -1,0 +1,3 @@
+from repro.serving.costmodel import CostModel
+from repro.serving.simulator import ServingConfig, Simulator
+from repro.serving.workload import PATTERNS, Session, make_sessions

@@ -1,0 +1,87 @@
+"""Beyond-paper: the Appendix-B.2 alternatives, implemented.
+
+The paper observes that at extreme concurrency, decode-side KV pressure forces
+vLLM's CPU staging/reload ("swap-like" behaviour) and throughput drops — and
+explicitly leaves the mitigations as future work:
+
+  "alternative designs could mitigate overflow-induced staging via stricter
+   admission control, decode-to-prefill backpressure, or per-session
+   reservation of GPU-resident KV buffers."   (Appendix B.2)
+
+This module implements all three as pluggable policies for the simulator, and
+``benchmarks/b2_alternatives.py`` compares them against the paper's staging
+behaviour at the concurrency levels where Fig. 4's throughput rolls over.
+
+Policies (decode-side admission of a handed-off request):
+  staging      — paper behaviour: always admit; overflow inflates ITL (B.2).
+  admission    — strict: cap concurrent sessions so worst-case resident KV
+                 (every session at its max context) fits HBM. No staging ever,
+                 but admits fewer sessions.
+  backpressure — decode worker exposes free-HBM; the PREFILL worker defers the
+                 handoff (holds the request) until the decode side can host
+                 the KV resident. Prefill keeps serving other sessions.
+  reservation  — per-session KV budget reserved at session admission (max
+                 context × bytes/token); sessions beyond the reservable
+                 capacity queue at admission. Equivalent to admission control
+                 with exact per-session accounting instead of a global cap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.kvcache.manager import kv_bytes_per_token
+
+POLICIES = ("staging", "admission", "backpressure", "reservation")
+
+
+@dataclass
+class DecodeAdmission:
+    """Decision for a handed-off request arriving at a decode worker."""
+    admit: bool
+    delay_hint_s: float = 0.0      # backpressure: retry after this long
+
+
+class B2Policy:
+    def __init__(self, policy: str, cfg, *, hbm_bytes: float,
+                 weight_bytes: float, max_context_tokens: int):
+        assert policy in POLICIES, policy
+        self.policy = policy
+        self.kv_per_tok = kv_bytes_per_token(cfg)
+        self.free_budget = hbm_bytes - weight_bytes
+        self.max_ctx_bytes = max_context_tokens * self.kv_per_tok
+        self.reserved: dict = {}            # session id -> reserved bytes
+
+    # -- session-level admission (reservation policy) --------------------
+    def try_reserve(self, sid: int) -> bool:
+        if self.policy != "reservation":
+            return True
+        used = sum(self.reserved.values())
+        if used + self.max_ctx_bytes > self.free_budget:
+            return False
+        self.reserved[sid] = self.max_ctx_bytes
+        return True
+
+    def release(self, sid: int) -> None:
+        self.reserved.pop(sid, None)
+
+    # -- request-level admission (handoff arrival) ------------------------
+    def admit_decode(self, resident_bytes: float, incoming_tokens: int
+                     ) -> DecodeAdmission:
+        incoming = incoming_tokens * self.kv_per_tok
+        if self.policy in ("staging", "admission", "reservation"):
+            # staging: always admit (overflow priced as ITL inflation);
+            # admission/reservation prevent overflow upstream.
+            return DecodeAdmission(admit=True)
+        # backpressure: defer the handoff until the KV fits resident
+        if resident_bytes + incoming <= self.free_budget:
+            return DecodeAdmission(admit=True)
+        # retry when roughly one request's worth of KV drains
+        return DecodeAdmission(admit=False, delay_hint_s=0.02)
+
+    # -- global session cap (admission policy) ----------------------------
+    def session_cap(self, requested_cap: int) -> int:
+        if self.policy != "admission":
+            return requested_cap
+        per_session = self.max_ctx_bytes
+        fit = max(1, int(self.free_budget / per_session))
+        return min(requested_cap, fit)

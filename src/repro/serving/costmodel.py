@@ -1,0 +1,95 @@
+"""TPU v5e cost model for prefill/decode step times.
+
+Analytic three-term roofline (compute / HBM / interconnect) per step, with an
+optional calibration path that scales the analytic terms to the dry-run's
+compiled cost_analysis (benchmarks/roofline.py writes the calibration JSON).
+The event-driven serving simulator prices every operation through this model,
+which is how the paper's A100 numbers are re-grounded on TPU (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.kvcache.manager import kv_bytes_per_token, state_bytes_per_seq
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+MXU_EFF = 0.55               # sustained fraction of peak for big matmuls
+BW_EFF = 0.80
+
+
+@dataclass
+class StepCost:
+    seconds: float
+    compute_s: float
+    memory_s: float
+    flops: float
+    bytes: float
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, *, chips: int = 1,
+                 dtype_bytes: int = 2, calibration: dict | None = None):
+        self.cfg = cfg
+        self.chips = chips
+        self.db = dtype_bytes
+        self.n_params = cfg.param_count()
+        self.n_active = cfg.active_param_count()
+        self.kv_per_tok = kv_bytes_per_token(cfg, dtype_bytes)
+        self.state_per_seq = state_bytes_per_seq(cfg)
+        # calibration: multiplicative fudge from compiled dry-run artifacts
+        self.flops_scale = 1.0
+        self.bytes_scale = 1.0
+        if calibration:
+            self.flops_scale = calibration.get("flops_scale", 1.0)
+            self.bytes_scale = calibration.get("bytes_scale", 1.0)
+
+    @classmethod
+    def from_calibration_file(cls, cfg, path, **kw):
+        calib = None
+        if os.path.exists(path):
+            with open(path) as f:
+                calib = json.load(f).get(cfg.name)
+        return cls(cfg, calibration=calib, **kw)
+
+    # ------------------------------------------------------------------
+    def _attn_flops(self, n_new: int, kv_len: int, batch: int) -> float:
+        """Attention score+value FLOPs (grows with context)."""
+        cfg = self.cfg
+        total = 0.0
+        for kind in cfg.layer_kinds():
+            if kind == "attn":
+                eff_kv = kv_len
+            elif kind == "local_attn":
+                eff_kv = min(kv_len, cfg.sliding_window or kv_len)
+            else:
+                continue
+            total += 4.0 * batch * n_new * eff_kv * cfg.n_heads * cfg.head_dim
+        return total
+
+    def prefill(self, n_new: int, kv_len: int, batch: int = 1) -> StepCost:
+        """Process ``n_new`` prompt tokens against ``kv_len`` existing cache."""
+        flops = (2.0 * self.n_active * n_new * batch
+                 + self._attn_flops(n_new, kv_len + n_new, batch))
+        flops *= self.flops_scale
+        bytes_ = (self.n_params * self.db          # weights stream once
+                  + batch * (kv_len + n_new) * self.kv_per_tok) * self.bytes_scale
+        c = flops / (self.chips * PEAK_FLOPS * MXU_EFF)
+        m = bytes_ / (self.chips * HBM_BW * BW_EFF)
+        return StepCost(max(c, m), c, m, flops, bytes_)
+
+    def decode_step(self, batch: int, avg_kv_len: float) -> StepCost:
+        """One token for every sequence in the decode batch."""
+        flops = (2.0 * self.n_active * batch
+                 + self._attn_flops(1, int(avg_kv_len), batch)) * self.flops_scale
+        bytes_ = (self.n_params * self.db
+                  + batch * (avg_kv_len * self.kv_per_tok + self.state_per_seq)
+                  ) * self.bytes_scale
+        c = flops / (self.chips * PEAK_FLOPS * MXU_EFF)
+        m = bytes_ / (self.chips * HBM_BW * BW_EFF)
+        return StepCost(max(c, m), c, m, flops, bytes_)

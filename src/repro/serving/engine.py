@@ -1,0 +1,142 @@
+"""Small-scale REAL-JAX disaggregated engine (integration-test twin of the
+simulator).
+
+Runs actual models on CPU: a prefill worker hosting the frozen base model
+(per-session cache, incrementally extended — §3.3 partial prefill), a decode
+pool of task-specific cache-conditioned decoders, and a cache-handoff step
+that copies the base cache to the decode side with a schema check. Metrics
+(prefix hit tokens, handoff bytes) use the same CacheManager bookkeeping as
+the simulator, so the event-level logic is validated against real tensors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.prefillshare import base_prefill, cache_schema
+from repro.kvcache.handoff import HandoffChannel, transfer_cache
+from repro.kvcache.manager import CacheManager
+from repro.models import forward
+
+
+@dataclass
+class SessionCache:
+    cache: object
+    n_tokens: int
+    capacity: int
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens_computed: int = 0
+    prefill_tokens_reused: int = 0
+    handoffs: int = 0
+    handoff_bytes: int = 0
+
+    @property
+    def hit_ratio(self):
+        tot = self.prefill_tokens_computed + self.prefill_tokens_reused
+        return self.prefill_tokens_reused / tot if tot else 0.0
+
+
+class PrefillWorker:
+    """Hosts the frozen base model; one incrementally-extended cache/session."""
+
+    def __init__(self, cfg: ModelConfig, base_params, *, capacity: int = 512,
+                 mgr_blocks: int = 4096, block_size: int = 16):
+        self.cfg = cfg
+        self.base_params = base_params
+        self.schema = cache_schema(cfg, base_params, capacity)
+        self.sessions: dict[int, SessionCache] = {}
+        self.mgr = CacheManager(cfg, mgr_blocks, block_size)
+        self.stats = EngineStats()
+
+    def prefill(self, sid: int, tokens: np.ndarray) -> SessionCache:
+        """Ensure the session cache covers ``tokens``; compute only the tail."""
+        tokens = np.asarray(tokens)
+        n = len(tokens)
+        sc = self.sessions.get(sid)
+        alloc = self.mgr.acquire(tokens.tolist())      # block-level metrics
+        self.mgr.commit(tokens.tolist(), alloc)
+        self.mgr.release(alloc)
+        if sc is None:
+            out, cache = base_prefill(
+                self.cfg, self.base_params, jnp.asarray(tokens)[None],
+                cache_len=max(self.schema.cache_len, n))
+            sc = SessionCache(cache, n, max(self.schema.cache_len, n))
+            self.stats.prefill_tokens_computed += n
+        else:
+            assert n > sc.n_tokens, "context is append-only"
+            new = tokens[sc.n_tokens:]
+            _, cache = base_prefill(
+                self.cfg, self.base_params, jnp.asarray(new)[None],
+                cache_len=sc.capacity, cache=sc.cache,
+                pos=jnp.array([sc.n_tokens], jnp.int32))
+            self.stats.prefill_tokens_computed += len(new)
+            self.stats.prefill_tokens_reused += sc.n_tokens
+            sc = SessionCache(cache, n, sc.capacity)
+        self.sessions[sid] = sc
+        return sc
+
+    def end_session(self, sid: int):
+        self.sessions.pop(sid, None)
+
+
+class DecodeWorker:
+    """Hosts ONE task-specific decode module (cache-conditioned)."""
+
+    def __init__(self, cfg: ModelConfig, model_id: str, dec_params,
+                 expected_schema):
+        self.cfg = cfg
+        self.model_id = model_id
+        self.dec_params = dec_params
+        self.expected_schema = expected_schema
+
+    def generate(self, cache, start_pos: int, first_token: int,
+                 n_tokens: int) -> np.ndarray:
+        cfg = self.cfg
+        B = 1
+        pos = jnp.array([start_pos], jnp.int32)
+        tok = jnp.array([first_token], jnp.int32)
+        out = []
+        for _ in range(n_tokens):
+            logits, cache, _ = forward(cfg, self.dec_params, tok[:, None],
+                                       cache=cache, pos=pos)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(int(tok[0]))
+            pos = pos + 1
+        return np.asarray(out, np.int32)
+
+
+class LocalDisaggEngine:
+    """Proxy + prefill worker + heterogeneous decode pool (Appendix B.1)."""
+
+    def __init__(self, cfg: ModelConfig, base_params, decoders: dict,
+                 *, capacity: int = 512):
+        self.cfg = cfg
+        self.prefill = PrefillWorker(cfg, base_params, capacity=capacity)
+        self.handoff = HandoffChannel(cfg)
+        self.decoders = {
+            mid: DecodeWorker(cfg, mid, params, self.prefill.schema)
+            for mid, params in decoders.items()}
+        self.stats = self.prefill.stats
+
+    def invoke(self, sid: int, context_tokens, model_id: str,
+               gen_tokens: int, first_token: int = 2) -> np.ndarray:
+        """One agent invocation: shared/partial prefill -> handoff ->
+        selective decode (paper §3.3 execution pipeline)."""
+        sc = self.prefill.prefill(sid, context_tokens)
+        dw = self.decoders[model_id]
+        HandoffChannel.check(self.prefill.schema, dw.expected_schema)
+        cache = transfer_cache(sc.cache)               # decode-side copy
+        plan = self.handoff.plan(sc.n_tokens)
+        self.stats.handoffs += 1
+        self.stats.handoff_bytes += plan.bytes
+        return dw.generate(cache, sc.n_tokens, first_token, gen_tokens)
+
+    def end_session(self, sid: int):
+        self.prefill.end_session(sid)

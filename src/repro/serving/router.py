@@ -1,0 +1,44 @@
+"""Prefix-aware routing policies (paper §3.3 + beyond).
+
+The paper routes "requests with the same shared prefix ... to a consistent
+prefill worker WHENEVER POSSIBLE" — leaving the locality-vs-load tradeoff
+unspecified. Policies:
+
+  pinned       — paper behaviour: session -> hash(worker). Max prefix
+                 locality; hot sessions can queue behind a busy worker.
+  least_loaded — ignore locality, pick the shortest queue. Max load balance;
+                 every migration costs a full re-prefill on the new worker.
+  spillover    — pinned, but if the pinned worker's backlog exceeds
+                 ``spill_threshold`` seconds, fall back to the least-loaded
+                 worker (paying the one-time prefix recompute there, which
+                 then seeds ITS cache). The "whenever possible" made precise.
+
+``benchmarks`` comparison: tests/test_router.py asserts the qualitative
+ordering (spillover >= pinned throughput under skewed load, pinned >= others
+on hit ratio).
+"""
+from __future__ import annotations
+
+POLICIES = ("pinned", "least_loaded", "spillover")
+
+
+class PrefillRouter:
+    def __init__(self, n_workers: int, policy: str = "pinned",
+                 spill_threshold_s: float = 0.5):
+        assert policy in POLICIES, policy
+        self.n = n_workers
+        self.policy = policy
+        self.spill = spill_threshold_s
+
+    def pick(self, sid: int, now: float, backlogs) -> int:
+        """backlogs: per-worker estimated seconds of queued work."""
+        home = sid % self.n
+        if self.policy == "pinned":
+            return home
+        least = min(range(self.n), key=lambda i: backlogs[i])
+        if self.policy == "least_loaded":
+            return least
+        # spillover
+        if backlogs[home] - backlogs[least] > self.spill:
+            return least
+        return home

@@ -1,0 +1,359 @@
+"""Event-driven simulator for multi-model disaggregated serving.
+
+Reproduces the paper's serving experiments (Figs. 3-4) on TPU cost terms:
+
+  BASELINE      — N independent (prefill, decode) worker pairs, one per
+                  specialized model. Every pair owns a private paged KV pool:
+                  the same session prefix is prefilled and stored N times
+                  (Eq. 8), so per-pool memory pressure is N× higher and LRU
+                  eviction sets in early -> prefix-cache misses -> full
+                  recompute -> tail-latency collapse under load.
+  PREFILLSHARE  — one shared frozen base model across the prefill pool;
+                  sessions are pinned to a prefill worker (prefix-locality
+                  routing), the cache is computed once and incrementally
+                  extended across agent switches, and pages are handed off to
+                  ANY decode model (cache-conditioned decoders accept them) —
+                  Eq. 9.
+
+Decode workers run continuous batching with a fluid approximation (batch-
+dependent inter-token latency re-evaluated on membership change) and model
+Appendix-B.2 staging: when resident KV exceeds the decode worker's HBM
+budget, handoff/reload cost inflates.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kvcache.handoff import HandoffChannel
+from repro.kvcache.manager import CacheManager, PoolExhausted, kv_bytes_per_token
+from repro.serving.backpressure import B2Policy
+from repro.serving.costmodel import CostModel
+from repro.serving.router import PrefillRouter
+from repro.serving.workload import Session
+
+
+@dataclass
+class ServingConfig:
+    mode: str = "prefillshare"          # or "baseline"
+    n_models: int = 4
+    n_prefill_workers: int = 4
+    n_decode_workers: int = 4
+    chips_per_worker: int = 4
+    hbm_per_worker: float = 4 * 16e9    # chips * 16GB (v5e)
+    block_size: int = 16
+    max_concurrent: int = 64
+    max_decode_batch: int = 64
+    staging_penalty: float = 4.0
+    handoff_links: int = 4
+    b2_policy: str = "staging"   # staging | admission | backpressure | reservation
+                                 # (Appendix B.2 alternatives; see backpressure.py)
+    router_policy: str = "pinned"  # pinned | least_loaded | spillover (router.py)
+
+
+@dataclass
+class InvocationRecord:
+    sid: int
+    inv_idx: int
+    model_id: int
+    issued: float
+    ttft: float = 0.0
+    done: float = 0.0
+    gen_tokens: int = 0
+    prefill_cached: int = 0
+    prefill_new: int = 0
+    staged: bool = False
+
+
+@dataclass
+class _SessionState:
+    session: Session
+    inv_idx: int = -1
+    context: list = field(default_factory=list)
+    allocs: dict = field(default_factory=dict)    # worker id -> Allocation
+    started: float = 0.0
+    records: list = field(default_factory=list)
+
+
+class _PrefillWorker:
+    """Single-server FIFO prefill worker with a paged prefix cache."""
+
+    def __init__(self, wid, cfg, cost, pool_bytes, block_size):
+        self.wid = wid
+        self.cost = cost
+        bpt = kv_bytes_per_token(cfg)
+        n_blocks = max(64, int(pool_bytes / (bpt * block_size)))
+        self.mgr = CacheManager(cfg, n_blocks, block_size)
+        self.busy_until = 0.0
+        self.queue = []
+        self.busy_time = 0.0
+
+    def service_time(self, n_new, kv_len):
+        return self.cost.prefill(max(n_new, 1), kv_len).seconds
+
+
+class _DecodeWorker:
+    """Continuous-batching decode worker (fluid approximation)."""
+
+    def __init__(self, wid, cfg, cost, hbm_bytes, max_batch):
+        self.wid = wid
+        self.cfg = cfg
+        self.cost = cost
+        self.hbm = hbm_bytes
+        self.max_batch = max_batch
+        self.kv_per_tok = kv_bytes_per_token(cfg)
+        self.weight_bytes = cfg.param_count() * 2
+        self.active = {}        # rid -> dict(remaining, kv_len, meta)
+        self.wait = []
+        self.last_t = 0.0
+        self.gen_tokens = 0
+
+    # -- fluid batching ------------------------------------------------
+    def resident_bytes(self):
+        return sum(r["kv_len"] * self.kv_per_tok for r in self.active.values())
+
+    def itl(self):
+        if not self.active:
+            return 0.0
+        b = len(self.active)
+        avg_kv = np.mean([r["kv_len"] for r in self.active.values()])
+        t = self.cost.decode_step(b, avg_kv).seconds
+        free = self.hbm - self.weight_bytes
+        over = max(0.0, self.resident_bytes() - free) / max(free, 1.0)
+        return t * (1.0 + 3.0 * over)   # staging/reload inflation (B.2)
+
+    def advance(self, now):
+        """Progress all active requests from last_t to now; return finished."""
+        dt = now - self.last_t
+        self.last_t = now
+        finished = []
+        if not self.active or dt <= 0:
+            return finished
+        step = self.itl()
+        steps = dt / step if step > 0 else 0.0
+        for rid, r in list(self.active.items()):
+            n = min(r["remaining"], steps)
+            r["remaining"] -= n
+            r["kv_len"] += n
+            self.gen_tokens += n
+            if r["remaining"] <= 1e-9:
+                finished.append((rid, r))
+                del self.active[rid]
+        return finished
+
+    def next_completion(self, now):
+        if not self.active:
+            return None
+        step = self.itl()
+        rem = min(r["remaining"] for r in self.active.values())
+        return now + max(rem, 1e-6) * step
+
+
+class Simulator:
+    def __init__(self, model_cfg: ModelConfig, scfg: ServingConfig,
+                 sessions: list[Session], seed: int = 0):
+        self.cfg = model_cfg
+        self.scfg = scfg
+        self.sessions = sessions
+        cost = CostModel(model_cfg, chips=scfg.chips_per_worker)
+        kv_budget = scfg.hbm_per_worker - model_cfg.param_count() * 2
+        assert kv_budget > 0, "worker HBM cannot even hold the weights"
+        self.prefill = [
+            _PrefillWorker(i, model_cfg, cost, kv_budget, scfg.block_size)
+            for i in range(scfg.n_prefill_workers)]
+        self.decode = [
+            _DecodeWorker(i, model_cfg, cost, scfg.hbm_per_worker,
+                          scfg.max_decode_batch)
+            for i in range(scfg.n_decode_workers)]
+        self.handoff = HandoffChannel(model_cfg, n_links=scfg.handoff_links,
+                                      staging_penalty=scfg.staging_penalty)
+        max_ctx = max(
+            s.system_tokens + sum(i.delta_tokens + i.gen_tokens
+                                  for i in s.invocations)
+            for s in sessions)
+        self.b2 = B2Policy(scfg.b2_policy, model_cfg,
+                           hbm_bytes=scfg.hbm_per_worker,
+                           weight_bytes=model_cfg.param_count() * 2,
+                           max_context_tokens=max_ctx)
+        self.effective_cap = self.b2.session_cap(scfg.max_concurrent)
+        self.router = PrefillRouter(scfg.n_prefill_workers,
+                                    policy=scfg.router_policy)
+        self.events = []
+        self._seq = itertools.count()
+        self.admitted = 0
+        self.admission_queue = []
+        self.states: dict[int, _SessionState] = {}
+        self.records: list[InvocationRecord] = []
+        self.completed_sessions = []
+        self.t_end = 0.0
+
+    # -- routing (paper §3.3 prefix-aware routing) ----------------------
+    def route_prefill(self, st: _SessionState, model_id: int,
+                      now: float = 0.0) -> _PrefillWorker:
+        if self.scfg.mode != "prefillshare":
+            return self.prefill[model_id % len(self.prefill)]
+        backlogs = [max(0.0, w.busy_until - now)
+                    + 0.05 * len(w.queue) for w in self.prefill]
+        return self.prefill[self.router.pick(st.session.sid, now, backlogs)]
+
+    def route_decode(self, model_id: int) -> _DecodeWorker:
+        return self.decode[model_id % len(self.decode)]
+
+    # -- event plumbing --------------------------------------------------
+    def _push(self, t, kind, payload):
+        heapq.heappush(self.events, (t, next(self._seq), kind, payload))
+
+    def run(self):
+        for s in self.sessions:
+            self._push(s.arrival, "arrive", s)
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            getattr(self, f"_on_{kind}")(t, payload)
+        return self.summary()
+
+    # -- session lifecycle -------------------------------------------------
+    def _on_arrive(self, t, session: Session):
+        if (self.admitted >= self.effective_cap
+                or not self.b2.try_reserve(session.sid)):
+            self.admission_queue.append(session)
+            return
+        self._admit(t, session)
+
+    def _admit(self, t, session: Session):
+        self.admitted += 1
+        st = _SessionState(session=session, started=t)
+        st.context = session.fresh_tokens(session.system_tokens, salt=0)
+        self.states[session.sid] = st
+        self._next_invocation(t, st)
+
+    def _next_invocation(self, t, st: _SessionState):
+        st.inv_idx += 1
+        if st.inv_idx >= len(st.session.invocations):
+            self._finish_session(t, st)
+            return
+        inv = st.session.invocations[st.inv_idx]
+        st.context += st.session.fresh_tokens(inv.delta_tokens,
+                                              salt=1 + st.inv_idx * 2)
+        rec = InvocationRecord(sid=st.session.sid, inv_idx=st.inv_idx,
+                               model_id=inv.model_id, issued=t,
+                               gen_tokens=inv.gen_tokens)
+        st.records.append(rec)
+        self.records.append(rec)
+        w = self.route_prefill(st, inv.model_id, now=t)
+        w.queue.append((st, inv, rec))
+        self._kick_prefill(t, w)
+
+    def _kick_prefill(self, t, w: _PrefillWorker):
+        if w.busy_until > t or not w.queue:
+            return
+        st, inv, rec = w.queue.pop(0)
+        tokens = st.context
+        alloc = w.mgr.acquire(tokens)   # pool sized >= one max-context request
+        n_new = alloc.total_tokens - alloc.cached_tokens
+        rec.prefill_cached = alloc.cached_tokens
+        rec.prefill_new = n_new
+        dur = w.service_time(n_new, alloc.cached_tokens)
+        w.busy_until = t + dur
+        w.busy_time += dur
+        w.mgr.commit(tokens, alloc)
+        self._push(t + dur, "prefill_done", (w.wid, st, inv, rec, alloc))
+
+    def _on_prefill_done(self, t, payload):
+        wid, st, inv, rec, alloc = payload
+        w = self.prefill[wid]
+        # pages stay CACHED (LRU-evictable) for future prefix extension; the
+        # decode side consumes its own handed-off copy, so no pin is needed.
+        w.mgr.release(alloc)
+        self._kick_prefill(t, w)
+        self._try_handoff(t, st, inv, rec)
+
+    def _try_handoff(self, t, st, inv, rec):
+        # Hand the shared cache to the decode worker, subject to the B.2
+        # policy (backpressure may defer until decode HBM can host the KV).
+        dw = self.route_decode(inv.model_id)
+        dw.advance(t)
+        decision = self.b2.admit_decode(dw.resident_bytes(), len(st.context))
+        if not decision.admit:
+            self._push(t + decision.delay_hint_s, "handoff_retry",
+                       (st, inv, rec))
+            return
+        free = dw.hbm - dw.weight_bytes - dw.resident_bytes()
+        plan = self.handoff.plan(len(st.context), decode_hbm_free_bytes=int(free))
+        rec.staged = plan.staged
+        self._push(t + plan.seconds, "decode_start", (dw.wid, st, inv, rec))
+
+    def _on_handoff_retry(self, t, payload):
+        st, inv, rec = payload
+        self._try_handoff(t, st, inv, rec)
+
+    def _on_decode_start(self, t, payload):
+        wid, st, inv, rec = payload
+        dw = self.decode[wid]
+        finished = dw.advance(t)
+        for rid, r in finished:
+            self._decode_finished(t, r)
+        rid = (st.session.sid, st.inv_idx)
+        dw.active[rid] = {"remaining": float(inv.gen_tokens),
+                          "kv_len": float(len(st.context)),
+                          "meta": (st, inv, rec)}
+        rec.ttft = t + dw.itl() - rec.issued        # first token after one step
+        self._reschedule(t, dw)
+
+    def _reschedule(self, t, dw: _DecodeWorker):
+        nxt = dw.next_completion(t)
+        if nxt is not None:
+            self._push(nxt, "decode_check", dw.wid)
+
+    def _on_decode_check(self, t, wid):
+        dw = self.decode[wid]
+        finished = dw.advance(t)
+        for rid, r in finished:
+            self._decode_finished(t, r)
+        self._reschedule(t, dw)
+
+    def _decode_finished(self, t, r):
+        st, inv, rec = r["meta"]
+        rec.done = t
+        # generated tokens join the shared context (prompt-construction rule)
+        st.context += st.session.fresh_tokens(inv.gen_tokens,
+                                              salt=2 + st.inv_idx * 2)
+        self.t_end = max(self.t_end, t)
+        self._next_invocation(t, st)
+
+    def _finish_session(self, t, st: _SessionState):
+        del self.states[st.session.sid]
+        self.admitted -= 1
+        self.b2.release(st.session.sid)
+        self.completed_sessions.append((st.session.sid, st.started, t))
+        while (self.admission_queue and self.admitted < self.effective_cap
+               and self.b2.try_reserve(self.admission_queue[0].sid)):
+            self._admit(t, self.admission_queue.pop(0))
+
+    # -- metrics ---------------------------------------------------------
+    def summary(self) -> dict:
+        recs = [r for r in self.records if r.done > 0]
+        sess = self.completed_sessions
+        e2e = [done - start for _, start, done in sess]
+        ttft = [r.ttft for r in recs]
+        total_gen = sum(r.gen_tokens for r in recs)
+        makespan = self.t_end - min(s.arrival for s in self.sessions)
+        hits = sum(w.mgr.stats.hit_tokens for w in self.prefill)
+        tot = sum(w.mgr.stats.total_tokens for w in self.prefill)
+        return {
+            "mode": self.scfg.mode,
+            "sessions_done": len(sess),
+            "p50_e2e_s": float(np.percentile(e2e, 50)) if e2e else float("nan"),
+            "p95_e2e_s": float(np.percentile(e2e, 95)) if e2e else float("nan"),
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else float("nan"),
+            "p95_ttft_s": float(np.percentile(ttft, 95)) if ttft else float("nan"),
+            "throughput_tok_s": total_gen / makespan if makespan > 0 else 0.0,
+            "prefix_hit_ratio": hits / tot if tot else 0.0,
+            "prefill_busy_frac": float(np.mean(
+                [w.busy_time / makespan for w in self.prefill])),
+            "evictions": sum(w.mgr.pool.stats.evictions for w in self.prefill),
+            "staged_frac": float(np.mean([r.staged for r in recs])) if recs else 0.0,
+        }

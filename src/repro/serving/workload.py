@@ -1,0 +1,70 @@
+"""Multi-model agent workload generators (paper §4.1 inference setup).
+
+Each session runs a four-agent multi-turn workflow; in every turn all agents
+are invoked sequentially over a largely shared prefix. Token-length profiles
+follow the ReAct / Reflexion statistics used by the paper (via Kim et al.
+2025): fixed per-invocation input/output lengths, immediate next-request on
+completion, Poisson session arrivals.
+
+Tokens are deterministic synthetic ids so prefix caching sees real prefix
+structure: a session's context is an append-only token list; each invocation
+appends its (agent-specific) instruction delta, then the generated tokens are
+appended by the engine, exactly matching the paper's prompt-construction rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Invocation:
+    model_id: int           # which specialized decoder
+    delta_tokens: int       # new context tokens appended before this call
+    gen_tokens: int         # tokens this call generates
+
+
+@dataclass
+class Session:
+    sid: int
+    arrival: float
+    invocations: list       # [Invocation]
+    system_tokens: int
+
+    def fresh_tokens(self, n: int, salt: int) -> list[int]:
+        """Deterministic token ids: identical across models/workers so prefix
+        caches agree, unique across (session, salt) so sessions don't alias."""
+        rng = np.random.default_rng((1234 + self.sid) * 1_000_003 + salt)
+        return rng.integers(100, 50_000, size=n).tolist()
+
+
+# Per-invocation (input-delta, output) token profiles.
+PATTERNS = {
+    # ReAct: thought/action/observation loops — short deltas, short gens
+    "react":     {"system": 512, "delta": 160, "gen": 128, "turns": 3},
+    # Reflexion: adds self-reflection text — longer generations
+    "reflexion": {"system": 512, "delta": 96,  "gen": 256, "turns": 4},
+}
+
+
+def make_sessions(pattern: str, *, n_sessions: int, arrival_rate: float,
+                  n_models: int = 4, seed: int = 0) -> list[Session]:
+    prof = PATTERNS[pattern]
+    rng = np.random.default_rng(seed)
+    # Poisson arrivals
+    gaps = rng.exponential(1.0 / arrival_rate, size=n_sessions)
+    arrivals = np.cumsum(gaps)
+    sessions = []
+    for sid in range(n_sessions):
+        invs = []
+        for _turn in range(prof["turns"]):
+            for agent in range(n_models):
+                invs.append(Invocation(
+                    model_id=agent,
+                    delta_tokens=prof["delta"],
+                    gen_tokens=prof["gen"]))
+        sessions.append(Session(sid=sid, arrival=float(arrivals[sid]),
+                                invocations=invs,
+                                system_tokens=prof["system"]))
+    return sessions

@@ -1,0 +1,1 @@
+from repro.training.optim import AdamW, apply_updates, constant_lr, warmup_cosine

@@ -1,0 +1,45 @@
+"""Checkpointing: pytree <-> .npz with a JSON treedef manifest."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":        # npz can't serialize ml_dtypes
+            arr = arr.astype(np.float32)
+        keyed[key] = arr
+    return keyed, treedef
+
+
+def save(path: str, tree, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    keyed, _ = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **keyed)
+    manifest = {"keys": sorted(keyed), "meta": meta or {}}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load(path: str, like):
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    keyed, treedef = _flatten(like)
+    leaves = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    for pathk, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+        arr = npz[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        import jax.numpy as jnp
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,85 @@
+"""From-scratch optimizers: AdamW (paper Appendix A settings) + LR schedules."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: any
+    v: any
+
+
+def warmup_cosine(base_lr: float, total_steps: int, warmup_ratio: float = 0.03,
+                  final_frac: float = 0.1) -> Callable:
+    warm = max(1, int(total_steps * warmup_ratio))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = base_lr * step / warm
+        t = jnp.clip((step - warm) / jnp.maximum(total_steps - warm, 1), 0.0, 1.0)
+        c = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warm, w, c)
+
+    return lr
+
+
+def constant_lr(base_lr: float) -> Callable:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+class AdamW:
+    """AdamW (Loshchilov & Hutter 2017). β1=0.9, β2=0.999, wd=0.1 per the paper.
+
+    Moment dtype is configurable: the big-config train dry-run uses bf16
+    moments to fit grok-1 optimizer state on a v5e pod (see EXPERIMENTS.md)."""
+
+    def __init__(self, lr_fn, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.1,
+                 moment_dtype=jnp.float32, grad_clip: float = 0.0):
+        self.lr_fn = lr_fn if callable(lr_fn) else constant_lr(lr_fn)
+        self.b1, self.b2, self.eps, self.wd = b1, b2, eps, weight_decay
+        self.moment_dtype = moment_dtype
+        self.grad_clip = grad_clip
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, dtype=self.moment_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(z, params), v=jax.tree.map(z, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: (b1 * mm.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)
+                                        ).astype(self.moment_dtype),
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: (b2 * vv.astype(jnp.float32)
+                                        + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                                        ).astype(self.moment_dtype),
+                         state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr_fn(step)
+
+        def upd(p, mm, vv):
+            mh = mm.astype(jnp.float32) / bc1
+            vh = vv.astype(jnp.float32) / bc2
+            u = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                u = u + self.wd * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamWState(step=step, m=m, v=v)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,149 @@
+"""Training loops: base pretraining, Full-FT, and cache-conditioned FT,
+plus greedy evaluation with shared / self / mixed caches (Fig. 2 machinery).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.prefillshare import (base_prefill, cache_conditioned_loss,
+                                     full_ft_loss, mix_caches)
+from repro.models import forward
+from repro.training import data as D
+from repro.training.optim import AdamW, apply_updates
+
+
+class Trainer:
+    """jit-compiled generic (loss, AdamW) loop over keyword batches."""
+
+    def __init__(self, loss_fn: Callable, opt: AdamW):
+        self.opt = opt
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            def lf(p):
+                out = loss_fn(p, **batch)
+                return out[0] if isinstance(out, tuple) else out
+            loss, grads = jax.value_and_grad(lf)(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss
+
+        self._step = step
+
+    def fit(self, params, batches: Iterable[dict], log_every: int = 0,
+            tag: str = ""):
+        opt_state = self.opt.init(params)
+        losses = []
+        for i, batch in enumerate(batches):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, loss = self._step(params, opt_state, batch)
+            losses.append(float(loss))
+            if log_every and (i + 1) % log_every == 0:
+                print(f"[{tag}] step {i+1}: loss {np.mean(losses[-log_every:]):.4f}")
+        return params, losses
+
+
+# ----------------------------------------------------------------------
+# Convenience wiring for the synthetic domains
+
+
+def pretrain_batches(cfg: ModelConfig, seed: int, steps: int, batch: int,
+                     spec: D.TaskSpec | None = None):
+    """Plain LM batches over the task mixture (the 'foundation' corpus)."""
+    spec = spec or D.TaskSpec(domain="mix", vocab=cfg.vocab_size)
+    for b in D.batches(seed, spec, batch, steps):
+        tokens = np.concatenate([b.prompt, b.target_in], 1)
+        tgt = np.concatenate([b.prompt[:, 1:], b.target_in[:, :1], b.target_out], 1)
+        mask = np.concatenate([(b.prompt != D.PAD).astype(np.float32)[:, 1:],
+                               np.ones((b.prompt.shape[0], 1), np.float32),
+                               b.target_mask], 1)
+        yield {"tokens": tokens, "targets": tgt, "mask": mask}
+
+
+def finetune_full(cfg: ModelConfig, params, domain: str, *, seed: int,
+                  steps: int, batch: int, lr: float = 1e-3, log_every: int = 0,
+                  spec: D.TaskSpec | None = None):
+    spec = spec or D.TaskSpec(domain=domain, vocab=cfg.vocab_size)
+    loss_fn = functools.partial(full_ft_loss, cfg)
+    tr = Trainer(loss_fn, AdamW(lr, weight_decay=0.01))
+    feed = ({"prompt": b.prompt, "target_in": b.target_in,
+             "target_out": b.target_out, "target_mask": b.target_mask}
+            for b in D.batches(seed, spec, batch, steps))
+    return tr.fit(params, feed, log_every=log_every, tag=f"full-ft/{domain}")
+
+
+def finetune_cache_conditioned(cfg: ModelConfig, dec_params, base_params,
+                               domain: str, *, seed: int, steps: int, batch: int,
+                               lr: float = 1e-3, share_ratio: float = 1.0,
+                               log_every: int = 0,
+                               spec: D.TaskSpec | None = None):
+    spec = spec or D.TaskSpec(domain=domain, vocab=cfg.vocab_size)
+
+    def loss_fn(p, **kw):
+        return cache_conditioned_loss(cfg, p, base_params,
+                                      share_ratio=share_ratio, **kw)
+
+    tr = Trainer(loss_fn, AdamW(lr, weight_decay=0.01))
+    feed = ({"prompt": b.prompt, "target_in": b.target_in,
+             "target_out": b.target_out, "target_mask": b.target_mask}
+            for b in D.batches(seed, spec, batch, steps))
+    return tr.fit(dec_params, feed, log_every=log_every,
+                  tag=f"cachecond/{domain}")
+
+
+# ----------------------------------------------------------------------
+# Evaluation: greedy decode conditioned on a (possibly foreign) prompt cache
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def _greedy(cfg: ModelConfig, dec_params, cache, pos, first_token, n_steps):
+    B = first_token.shape[0]
+
+    def body(carry, _):
+        cache, pos, tok = carry
+        logits, cache, _ = forward(cfg, dec_params, tok[:, None], cache=cache,
+                                   pos=pos)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (cache, pos + 1, nxt), nxt
+
+    (_, _, _), toks = jax.lax.scan(body, (cache, pos, first_token),
+                                   None, length=n_steps)
+    return jnp.moveaxis(toks, 0, 1)  # (B, n_steps)
+
+
+def evaluate(cfg: ModelConfig, dec_params, base_params, domain: str, *,
+             seed: int, batches: int = 4, batch: int = 64,
+             share_ratio: float = 1.0, spec: D.TaskSpec | None = None,
+             per_token: bool = False) -> float:
+    """Exact-match accuracy decoding from a prompt cache that is
+    share_ratio-mixed between the base model's (shared) and the decode
+    model's own prefill. ratio=1 -> PrefillShare serving; ratio=0 -> classic
+    per-model serving."""
+    spec = spec or D.TaskSpec(domain=domain, vocab=cfg.vocab_size)
+    accs = []
+    for b in D.batches(seed + 1000, spec, batch, batches):
+        Bn, Sp = b.prompt.shape
+        St = b.target_out.shape[1]
+        cache_len = Sp + St + 1
+        prompt = jnp.asarray(b.prompt)
+        _, c_base = base_prefill(cfg, base_params, prompt, cache_len=cache_len)
+        if share_ratio < 1.0:
+            _, c_self = base_prefill(cfg, dec_params, prompt, cache_len=cache_len)
+            cache = mix_caches(cfg, c_base, c_self, share_ratio)
+        else:
+            cache = c_base
+        pos = jnp.full((Bn,), Sp, jnp.int32)
+        first = jnp.full((Bn,), D.SEP, jnp.int32)
+        pred = _greedy(cfg, dec_params, cache, pos, first, St)
+        if per_token:
+            ok = ((np.asarray(pred) == b.target_out) * b.target_mask).sum()
+            accs.append(ok / b.target_mask.sum())
+        else:
+            accs.append(D.answer_accuracy(np.asarray(pred), b.target_out,
+                                          b.target_mask))
+    return float(np.mean(accs))

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate a REDUCED same-family
+variant (2+ layers, d_model<=512, <=4 experts) and run one forward pass and
+one train step on CPU, asserting output shapes and no NaNs. Full configs are
+exercised only via the dry-run (ShapeDtypeStructs, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import encode, forward, init_cache, init_params, train_loss
+from repro.training.optim import AdamW, apply_updates
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B=2, S=12):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.is_encdec:
+        kw["enc_embeds"] = jax.random.normal(KEY, (B, 10, cfg.d_model)) * 0.1
+    if cfg.input_mode == "mixed":
+        kw["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_prefix_embeds, cfg.d_model)) * 0.1
+    return toks, kw
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_forward_and_shapes(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    params = init_params(cfg, KEY)
+    toks, kw = _inputs(cfg)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, kw["enc_embeds"])
+        assert enc_out.shape == kw["enc_embeds"].shape
+    logits, _, _ = forward(cfg, params, toks, logits="all", enc_out=enc_out,
+                           prefix_embeds=kw.get("prefix_embeds"))
+    S_out = toks.shape[1] + (cfg.n_prefix_embeds if cfg.input_mode == "mixed"
+                             else 0)
+    assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, KEY)
+    toks, kw = _inputs(cfg)
+    tgt = jnp.roll(toks, -1, 1)
+    mask = jnp.ones_like(toks, jnp.float32)
+
+    def lf(p):
+        loss, _ = train_loss(cfg, p, toks, tgt, mask, remat=True,
+                             prefix_embeds=kw.get("prefix_embeds"),
+                             enc_embeds=kw.get("enc_embeds"))
+        return loss
+
+    loss0, grads = jax.value_and_grad(lf)(params)
+    assert jnp.isfinite(loss0)
+    gnorm = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+    opt = AdamW(1e-3)
+    upd, _ = opt.update(grads, opt.init(params), params)
+    params2 = apply_updates(params, upd)
+    loss1 = lf(params2)
+    assert jnp.isfinite(loss1)
+    assert float(loss1) < float(loss0) + 0.5  # one step doesn't explode
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_decode_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, KEY)
+    toks, kw = _inputs(cfg)
+    enc_out = encode(cfg, params, kw["enc_embeds"]) if cfg.is_encdec else None
+    npfx = cfg.n_prefix_embeds if cfg.input_mode == "mixed" else 0
+    B, S = toks.shape
+    cache = init_cache(cfg, B, S + npfx + 4,
+                       enc_len=10 if cfg.is_encdec else 0)
+    out, cache, _ = forward(cfg, params, toks, cache=cache,
+                            pos=jnp.zeros(B, jnp.int32), enc_out=enc_out,
+                            prefix_embeds=kw.get("prefix_embeds"))
+    nt = jnp.argmax(out, -1)[:, None]
+    out2, _, _ = forward(cfg, params, nt, cache=cache,
+                         pos=jnp.full((B,), S + npfx, jnp.int32))
+    full, _, _ = forward(cfg, params, jnp.concatenate([toks, nt], 1),
+                         logits="all", enc_out=enc_out,
+                         prefix_embeds=kw.get("prefix_embeds"))
+    assert float(jnp.abs(out2 - full[:, -1]).max()) < 2e-3

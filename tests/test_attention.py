@@ -1,0 +1,77 @@
+"""Attention semantics: flash == direct, masks, positions, hypothesis sweeps."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.models.attention import attention
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _mk(B, Sq, Tk, Hq, Hkv, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D))
+    k = jax.random.normal(ks[1], (B, Tk, Hkv, D))
+    v = jax.random.normal(ks[2], (B, Tk, Hkv, D))
+    qp = jnp.broadcast_to(jnp.arange(Tk - Sq, Tk, dtype=jnp.int32), (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Tk, dtype=jnp.int32), (B, Tk))
+    return q, k, v, qp, kp
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 7, 32]), st.sampled_from([32, 48]),
+       st.sampled_from([(4, 2), (2, 1), (4, 4)]), st.sampled_from([0, 16]),
+       st.sampled_from([0.0, 20.0]))
+def test_flash_equals_direct(B, Sq, Tk_extra, hh, window, cap):
+    Hq, Hkv = hh
+    D = 16
+    Tk = Sq + Tk_extra
+    q, k, v, qp, kp = _mk(B, Sq, Tk, Hq, Hkv, D)
+    o_direct = attention(q, k, v, qp, kp, window=window, softcap=cap,
+                         force_flash=False)
+    o_flash = attention(q, k, v, qp, kp, window=window, softcap=cap,
+                        force_flash=True, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(o_direct), np.asarray(o_flash),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_invalid_slots_ignored():
+    """kpos=-1 slots (unwritten cache) must not contribute."""
+    B, Sq, Tk, H, D = 1, 1, 8, 2, 16
+    q, k, v, qp, kp = _mk(B, Sq, Tk, H, H, D)
+    qp = jnp.full((B, Sq), 100, jnp.int32)
+    kp_valid = jnp.where(jnp.arange(Tk) < 4, jnp.arange(Tk), -1)[None]
+    o1 = attention(q, k, v, qp, kp_valid)
+    # same but with garbage in the invalid slots
+    k2 = k.at[:, 4:].set(99.0)
+    v2 = v.at[:, 4:].set(-99.0)
+    o2 = attention(q, k2, v2, qp, kp_valid)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+def test_causality():
+    """Future positions must not leak: perturbing token j>i leaves row i fixed."""
+    B, S, H, D = 1, 8, 2, 16
+    q, k, v, qp, kp = _mk(B, S, S, H, H, D)
+    o1 = attention(q, k, v, qp, kp)
+    k2 = k.at[:, -1].add(5.0)
+    v2 = v.at[:, -1].add(5.0)
+    o2 = attention(q, k2, v2, qp, kp)
+    np.testing.assert_allclose(np.asarray(o1[:, :-1]), np.asarray(o2[:, :-1]),
+                               atol=1e-6)
+    assert float(jnp.abs(o1[:, -1] - o2[:, -1]).max()) > 1e-4
+
+
+def test_sliding_window_bounds():
+    """With window w, token i attends exactly to (i-w, i]."""
+    B, S, H, D, w = 1, 16, 1, 8, 4
+    q, k, v, qp, kp = _mk(B, S, S, H, H, D)
+    o1 = attention(q, k, v, qp, kp, window=w)
+    # tokens outside every query's window can be arbitrary
+    k2 = k.at[:, :S - w - 1].set(7.0)
+    v2 = v.at[:, :S - w - 1].set(-7.0)
+    o2 = attention(q, k2, v2, qp, kp, window=w)
+    np.testing.assert_allclose(np.asarray(o1[:, -1]), np.asarray(o2[:, -1]),
+                               atol=1e-6)

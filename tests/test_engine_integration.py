@@ -1,0 +1,69 @@
+"""Integration: the real-JAX disaggregated engine's incremental prefill +
+cross-model handoff must produce BIT-IDENTICAL generations to a from-scratch
+reference (full prefill of the whole context per invocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.prefillshare import base_prefill
+from repro.models import forward, init_params
+from repro.serving.engine import LocalDisaggEngine
+
+CFG = ModelConfig(name="eng", arch_type="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                  dtype="float32")
+
+
+def _reference_generate(cfg, base, dec, context, gen_tokens, first=2):
+    """Full prefill with base, decode with dec — no reuse anywhere."""
+    ctx = jnp.asarray(context)[None]
+    n = ctx.shape[1]
+    _, cache = base_prefill(cfg, base, ctx, cache_len=n + gen_tokens + 1)
+    pos = jnp.array([n], jnp.int32)
+    tok = jnp.array([first], jnp.int32)
+    out = []
+    for _ in range(gen_tokens):
+        logits, cache, _ = forward(cfg, dec, tok[:, None], cache=cache, pos=pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+        pos = pos + 1
+    return np.asarray(out, np.int32)
+
+
+def test_engine_matches_reference_across_agents_and_turns():
+    key = jax.random.PRNGKey(0)
+    base = init_params(CFG, key)
+    decs = {f"m{i}": init_params(CFG, jax.random.PRNGKey(10 + i))
+            for i in range(3)}
+    eng = LocalDisaggEngine(CFG, base, decs, capacity=256)
+
+    rng = np.random.default_rng(0)
+    context = list(rng.integers(4, 60, size=24))
+    sid = 0
+    for turn in range(2):
+        for mid in ("m0", "m1", "m2"):
+            context += list(rng.integers(4, 60, size=6))   # user/obs delta
+            gen = eng.invoke(sid, context, mid, gen_tokens=5)
+            ref = _reference_generate(CFG, base, decs[mid], context, 5)
+            np.testing.assert_array_equal(gen, ref)
+            context += list(gen)                           # append outputs
+    # incremental reuse actually happened
+    assert eng.stats.prefill_tokens_reused > eng.stats.prefill_tokens_computed
+    assert eng.stats.handoffs == 6
+    assert eng.stats.hit_ratio > 0.5
+    eng.end_session(sid)
+
+
+def test_engine_prefix_hit_accounting_monotone():
+    key = jax.random.PRNGKey(1)
+    base = init_params(CFG, key)
+    eng = LocalDisaggEngine(CFG, base, {"m": init_params(CFG, key)},
+                            capacity=256)
+    rng = np.random.default_rng(1)
+    ctx = list(rng.integers(4, 60, size=32))
+    eng.invoke(0, ctx, "m", gen_tokens=2)
+    h0 = eng.stats.hit_ratio
+    ctx += list(rng.integers(4, 60, size=8))
+    eng.invoke(0, ctx, "m", gen_tokens=2)
+    assert eng.stats.hit_ratio > h0

@@ -1,0 +1,169 @@
+"""KV cache subsystem: unit + hypothesis property tests on the invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.kvcache import (BlockPool, CacheManager, PoolExhausted, PrefixIndex)
+
+CFG = get_config("llama31-8b")
+
+
+# ----------------------------------------------------------------------
+# BlockPool
+
+
+def test_pool_alloc_free_cycle():
+    p = BlockPool(8, 4)
+    a = p.alloc(5)
+    assert p.active_count == 5
+    p.unref(a)
+    assert p.free_count == 8          # cached blocks still reusable
+    b = p.alloc(8)                    # evicts cached
+    assert len(b) == 8
+    with pytest.raises(PoolExhausted):
+        p.alloc(1)
+    p.check_invariants()
+
+
+def test_pool_ref_shared_blocks():
+    p = BlockPool(4, 4)
+    a = p.alloc(2)
+    p.unref(a)            # cached
+    p.ref(a)              # prefix hit re-pins
+    assert p.refcount(a[0]) == 1
+    p.ref(a)              # second request shares
+    assert p.refcount(a[0]) == 2
+    p.unref(a)
+    p.unref(a)
+    p.check_invariants()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "unref", "ref", "touch"]),
+                          st.integers(0, 6)), max_size=60))
+def test_pool_invariants_random_ops(ops):
+    p = BlockPool(8, 4)
+    held = []
+    cached = []
+    for op, n in ops:
+        if op == "alloc":
+            try:
+                blocks = p.alloc(n % 4 + 1)
+                held.append(blocks)
+            except PoolExhausted:
+                pass
+        elif op == "unref" and held:
+            blocks = held.pop(n % len(held))
+            p.unref(blocks)
+            cached.append(blocks)
+        elif op == "ref" and cached:
+            blocks = cached[n % len(cached)]
+            try:
+                p.ref(blocks)
+                held.append(blocks)
+                cached.remove(blocks)
+            except ValueError:
+                pass                  # evicted meanwhile — legal
+        elif op == "touch" and cached:
+            p.touch(cached[n % len(cached)])
+        p.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# PrefixIndex
+
+
+def test_radix_basic_match():
+    ix = PrefixIndex(4)
+    toks = list(range(16))
+    ix.insert(toks, [10, 11, 12, 13])
+    blocks, n = ix.match(toks)
+    assert blocks == [10, 11, 12, 13] and n == 16
+    blocks, n = ix.match(toks[:10])           # partial: 2 full blocks
+    assert blocks == [10, 11] and n == 8
+    blocks, n = ix.match(toks[:8] + [99] * 8)  # diverges after 2 blocks
+    assert blocks == [10, 11] and n == 8
+
+
+def test_radix_eviction_drops_subtree():
+    ix = PrefixIndex(4)
+    toks = list(range(16))
+    ix.insert(toks, [0, 1, 2, 3])
+    ix.remove_block(1)           # interior node -> descendants orphaned
+    blocks, n = ix.match(toks)
+    assert blocks == [0] and n == 4
+    ix.check_invariants()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=20),
+                min_size=1, max_size=12))
+def test_radix_match_equals_naive(seqs):
+    """Radix longest-prefix match == brute force over inserted sequences."""
+    bs = 2
+    ix = PrefixIndex(bs)
+    inserted = []
+    next_block = [0]
+
+    def blocks_for(tokens):
+        n = len(tokens) // bs
+        out = list(range(next_block[0], next_block[0] + n))
+        next_block[0] += n
+        return out
+
+    for s in seqs:
+        ix.insert(s, blocks_for(s))
+        inserted.append(list(s))
+        ix.check_invariants()
+
+    for s in seqs:
+        _, matched = ix.match(s)
+        best = 0
+        for t in inserted:
+            common = 0
+            for a, b in zip(t, s):
+                if a != b:
+                    break
+                common += 1
+            best = max(best, (common // bs) * bs)
+        assert matched == best
+
+
+# ----------------------------------------------------------------------
+# CacheManager
+
+
+def test_manager_prefix_extension():
+    m = CacheManager(CFG, num_blocks=32, block_size=4)
+    t1 = list(range(16))
+    a1 = m.acquire(t1)
+    assert a1.cached_tokens == 0
+    m.commit(t1, a1)
+    m.release(a1)
+    a2 = m.acquire(t1 + [50, 51, 52, 53])
+    assert a2.cached_tokens == 16      # incremental extension
+    m.release(a2)
+
+
+def test_manager_hit_accounting():
+    m = CacheManager(CFG, num_blocks=32, block_size=4)
+    t = list(range(16))
+    a = m.acquire(t)
+    m.commit(t, a)
+    m.release(a)
+    a = m.acquire(t)
+    m.release(a)
+    assert m.stats.hit_ratio == pytest.approx(16 / 32)
+
+
+def test_manager_eviction_under_pressure():
+    m = CacheManager(CFG, num_blocks=8, block_size=4)
+    for i in range(10):
+        t = [100 * i + j for j in range(16)]
+        a = m.acquire(t)
+        m.commit(t, a)
+        m.release(a)
+        m.pool.check_invariants()
+        m.index.check_invariants()
+    assert m.pool.stats.evictions > 0

@@ -1,0 +1,97 @@
+"""Beyond-paper: LoRA decode modules with cache-conditioned FT."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import (cache_conditioned_lora_loss, lora_apply,
+                             lora_init, lora_param_count)
+from repro.models import init_params
+from repro.training import data as D
+from repro.training.optim import AdamW, apply_updates
+from repro.training.trainer import evaluate
+
+CFG = ModelConfig(name="lora-t", arch_type="dense", n_layers=4, d_model=128,
+                  n_heads=4, n_kv_heads=4, d_ff=384, vocab_size=64,
+                  dtype="float32")
+
+
+def test_lora_init_targets_and_identity():
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    lora = lora_init(jax.random.PRNGKey(1), base, rank=4)
+    n_lora = lora_param_count(lora)
+    n_base = sum(x.size for x in jax.tree.leaves(base))
+    assert 0 < n_lora < 0.1 * n_base            # parameter-efficient
+    # B = 0 at init -> merge is an exact identity
+    merged = lora_apply(base, lora, rank=4)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(merged)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lora_grads_only_adapters():
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    lora = lora_init(jax.random.PRNGKey(1), base, rank=4)
+    b = D.make_batch(np.random.default_rng(0),
+                     D.TaskSpec(domain="copy", n_symbols=8, prompt_len=8), 4)
+
+    def lf(lp):
+        loss, _ = cache_conditioned_lora_loss(
+            CFG, lp, base, jnp.asarray(b.prompt), jnp.asarray(b.target_in),
+            jnp.asarray(b.target_out), jnp.asarray(b.target_mask), rank=4)
+        return loss
+
+    g = jax.grad(lf)(lora)
+    gnorm = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert gnorm > 0
+
+    def lf_base(bp):
+        loss, _ = cache_conditioned_lora_loss(
+            CFG, lora, bp, jnp.asarray(b.prompt), jnp.asarray(b.target_in),
+            jnp.asarray(b.target_out), jnp.asarray(b.target_mask), rank=4)
+        return loss
+
+    gb = jax.grad(lf_base)(base)
+    assert sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(gb)) == 0.0
+
+
+def test_lora_cache_conditioned_learns():
+    """LoRA decode module (rank 16, attn+MLP targets, 19% of params) reaches
+    1.0 accuracy from the SHARED base cache (validated config: base acc 0.497
+    -> LoRA 1.000; beyond-paper claim, see EXPERIMENTS.md)."""
+    from repro.models.model import train_loss
+    from repro.training.optim import warmup_cosine
+    from repro.training.trainer import Trainer, pretrain_batches
+
+    spec = D.TaskSpec(domain="copy", n_symbols=8, prompt_len=10, vocab=64)
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    tr = Trainer(functools.partial(train_loss, CFG, remat=False),
+                 AdamW(warmup_cosine(3e-3, 600), weight_decay=0.01))
+    base, _ = tr.fit(base, pretrain_batches(
+        CFG, 0, 600, 48, spec=D.TaskSpec(domain="mix", n_symbols=8,
+                                         prompt_len=10, vocab=64)))
+
+    targets = ("wq", "wk", "wv", "wo", "wi", "wu")
+    rank = 16
+    lora = lora_init(jax.random.PRNGKey(5), base, rank=rank, targets=targets)
+
+    def loss_fn(lp, **kw):
+        return cache_conditioned_lora_loss(CFG, lp, base, rank=rank, **kw)
+
+    tr2 = Trainer(loss_fn, AdamW(5e-3, weight_decay=0.0))
+    feed = ({"prompt": b.prompt, "target_in": b.target_in,
+             "target_out": b.target_out, "target_mask": b.target_mask}
+            for b in D.batches(1, spec, 48, 400))
+    lora, losses = tr2.fit(lora, feed)
+
+    dec = lora_apply(base, lora, rank=rank)
+    acc = evaluate(CFG, dec, base, "copy", seed=9, share_ratio=1.0,
+                   spec=spec, per_token=True)
+    acc_base = evaluate(CFG, base, base, "copy", seed=9, share_ratio=1.0,
+                        spec=spec, per_token=True)
+    n_lora = lora_param_count(lora)
+    n_base = sum(x.size for x in jax.tree.leaves(base))
+    assert n_lora < 0.25 * n_base
+    assert acc > 0.9, (acc, acc_base)
+    assert acc > acc_base + 0.2

@@ -1,0 +1,132 @@
+"""PrefillShare core semantics (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.prefillshare import (base_prefill, cache_conditioned_loss,
+                                     cache_schema, full_ft_loss, mix_caches,
+                                     model_fingerprint)
+from repro.kvcache.handoff import HandoffChannel, SchemaMismatch
+from repro.models import forward, init_params
+
+CFG = ModelConfig(name="t", arch_type="dense", n_layers=4, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                  dtype="float32")
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(seed=0):
+    return init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def _batch(B=2, Sp=8, St=6):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.randint(ks[0], (B, Sp), 4, 60),
+            jax.random.randint(ks[1], (B, St), 4, 60),
+            jax.random.randint(ks[2], (B, St), 4, 60),
+            jnp.ones((B, St), jnp.float32))
+
+
+def test_gradients_do_not_touch_base():
+    """Eq. 7: stop_grad on C_base — d loss / d θ_base must be exactly zero."""
+    base, dec = _params(0), _params(1)
+    prompt, ti, to, m = _batch()
+
+    def loss_wrt_base(bp):
+        l, _ = cache_conditioned_loss(CFG, dec, bp, prompt, ti, to, m)
+        return l
+
+    g = jax.grad(loss_wrt_base)(base)
+    total = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert total == 0.0
+
+
+def test_gradients_flow_to_decoder():
+    base, dec = _params(0), _params(1)
+    prompt, ti, to, m = _batch()
+
+    def loss_wrt_dec(dp):
+        l, _ = cache_conditioned_loss(CFG, dp, base, prompt, ti, to, m)
+        return l
+
+    g = jax.grad(loss_wrt_dec)(dec)
+    total = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert total > 0.0
+
+
+def test_share_ratio_endpoints():
+    """ratio=1 == pure base cache; ratio=0 == pure self cache."""
+    base, dec = _params(0), _params(1)
+    prompt, ti, to, m = _batch()
+    l1, _ = cache_conditioned_loss(CFG, dec, base, prompt, ti, to, m,
+                                   share_ratio=1.0)
+    _, cb = base_prefill(CFG, base, prompt, cache_len=20)
+    _, cs = base_prefill(CFG, dec, prompt, cache_len=20)
+    mixed_full = mix_caches(CFG, cb, cs, 1.0)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool((a == b).all()), mixed_full, cb))
+    mixed_none = mix_caches(CFG, cb, cs, 0.0)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool((a == b).all()), mixed_none, cs))
+    l0, _ = cache_conditioned_loss(CFG, dec, base, prompt, ti, to, m,
+                                   share_ratio=0.0)
+    assert abs(float(l1) - float(l0)) > 1e-6  # different conditioning
+
+
+def test_mix_ratio_layer_counts():
+    base, dec = _params(0), _params(1)
+    prompt, *_ = _batch()
+    _, cb = base_prefill(CFG, base, prompt, cache_len=16)
+    _, cs = base_prefill(CFG, dec, prompt, cache_len=16)
+    mixed = mix_caches(CFG, cb, cs, 0.5)
+    # first 2 of 4 layers from base
+    kb = cb["groups"]["pos0"]["k"]
+    km = mixed["groups"]["pos0"]["k"]
+    ks = cs["groups"]["pos0"]["k"]
+    assert bool((km[0] == kb[0]).all()) and bool((km[1] == kb[1]).all())
+    assert not bool((km[2] == kb[2]).all())
+    assert bool((km[2] == ks[2]).all())
+
+
+def test_partial_prefill_extends_cache():
+    """§3.3: extend-only prefill equals one-shot prefill."""
+    base = _params(0)
+    prompt, *_ = _batch(B=2, Sp=12)
+    out_full, c_full = base_prefill(CFG, base, prompt, cache_len=16)
+    _, c1 = base_prefill(CFG, base, prompt[:, :8], cache_len=16)
+    out2, c2 = base_prefill(CFG, base, prompt[:, 8:], cache_len=16, cache=c1,
+                            pos=jnp.full((2,), 8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(out2),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(c_full), jax.tree.leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_full_ft_loss_runs():
+    p = _params(0)
+    prompt, ti, to, m = _batch()
+    l, _ = full_ft_loss(CFG, p, prompt, ti, to, m)
+    assert jnp.isfinite(l)
+
+
+def test_schema_compat_and_handoff_guard():
+    base, other = _params(0), _params(1)
+    s1 = cache_schema(CFG, base, 128)
+    s2 = cache_schema(CFG, base, 256)      # different len, same producer: OK
+    assert s1.compatible_with(s2)
+    s3 = cache_schema(CFG, other, 128)     # different base: incompatible
+    assert not s1.compatible_with(s3)
+    with pytest.raises(SchemaMismatch):
+        HandoffChannel.check(s1, s3)
+    assert model_fingerprint(CFG, base) != model_fingerprint(CFG, other)
+
+
+def test_handoff_plan_costs():
+    ch = HandoffChannel(CFG, link_gbps=50.0, n_links=2)
+    p1 = ch.plan(1000)
+    p2 = ch.plan(2000)
+    assert p2.bytes > p1.bytes and p2.seconds > p1.seconds
+    staged = ch.plan(2000, decode_hbm_free_bytes=0)
+    assert staged.staged and staged.seconds > p2.seconds

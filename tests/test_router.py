@@ -1,0 +1,37 @@
+"""Routing policies: locality vs load (paper §3.3 'whenever possible')."""
+from repro.configs import get_config
+from repro.serving.router import POLICIES, PrefillRouter
+from repro.serving.simulator import ServingConfig, Simulator
+from repro.serving.workload import make_sessions
+
+CFG = get_config("llama31-8b")
+
+
+def _run(router_policy, rate=8.0, n=50):
+    sessions = make_sessions("react", n_sessions=n, arrival_rate=rate, seed=5)
+    sim = Simulator(CFG, ServingConfig(
+        mode="prefillshare", max_concurrent=128, chips_per_worker=2,
+        hbm_per_worker=32e9, router_policy=router_policy), sessions)
+    return sim.run()
+
+
+def test_unit_pick():
+    r = PrefillRouter(4, "pinned")
+    assert r.pick(5, 0.0, [9, 0, 0, 0]) == 1         # sticks to home
+    r = PrefillRouter(4, "least_loaded")
+    assert r.pick(5, 0.0, [9, 5, 0.1, 3]) == 2
+    r = PrefillRouter(4, "spillover", spill_threshold_s=0.5)
+    assert r.pick(5, 0.0, [0, 0.2, 0, 0]) == 1       # below threshold: home
+    assert r.pick(5, 0.0, [0, 9.0, 0, 0]) == 0       # overloaded: spill
+
+
+def test_policies_complete_and_locality_orders_hit_ratio():
+    res = {p: _run(p) for p in POLICIES}
+    for p, r in res.items():
+        assert r["sessions_done"] == 50, p
+    # pinned maximizes prefix locality
+    assert res["pinned"]["prefix_hit_ratio"] >= \
+        res["least_loaded"]["prefix_hit_ratio"]
+    # spillover keeps most of the locality
+    assert res["spillover"]["prefix_hit_ratio"] >= \
+        res["least_loaded"]["prefix_hit_ratio"]

@@ -1,0 +1,56 @@
+"""Hypothesis property tests on the serving simulator's conservation laws."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.serving.simulator import ServingConfig, Simulator
+from repro.serving.workload import make_sessions
+
+CFG = get_config("internlm2-1.8b")   # small cost model => fast sim
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(["baseline", "prefillshare"]),
+       st.sampled_from(["react", "reflexion"]),
+       st.integers(4, 20), st.floats(0.5, 8.0),
+       st.sampled_from([8, 32, 128]))
+def test_conservation(mode, pattern, n_sessions, rate, max_conc):
+    sessions = make_sessions(pattern, n_sessions=n_sessions,
+                             arrival_rate=rate, seed=7)
+    sim = Simulator(CFG, ServingConfig(mode=mode, max_concurrent=max_conc,
+                                       chips_per_worker=2,
+                                       hbm_per_worker=32e9), sessions)
+    r = sim.run()
+    # every session completes; every invocation is recorded once
+    assert r["sessions_done"] == n_sessions
+    n_inv = sum(len(s.invocations) for s in sessions)
+    assert len(sim.records) == n_inv
+    # time sanity: issued <= done, TTFT > 0
+    for rec in sim.records:
+        assert rec.done >= rec.issued
+        assert rec.ttft >= 0
+    # hit ratio in [0, 1]; decode workers drained
+    assert 0.0 <= r["prefix_hit_ratio"] <= 1.0
+    assert all(not dw.active for dw in sim.decode)
+    # admission cap respected throughout (post-hoc: concurrency counter is 0)
+    assert sim.admitted == 0 and not sim.admission_queue
+    # cache manager invariants survive the whole run
+    for w in sim.prefill:
+        w.mgr.pool.check_invariants()
+        w.mgr.index.check_invariants()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(4, 16), st.floats(1.0, 6.0))
+def test_prefillshare_never_worse_hit_ratio(n_sessions, rate):
+    res = {}
+    for mode in ("baseline", "prefillshare"):
+        sessions = make_sessions("react", n_sessions=n_sessions,
+                                 arrival_rate=rate, seed=11)
+        sim = Simulator(CFG, ServingConfig(mode=mode, max_concurrent=64,
+                                           chips_per_worker=2,
+                                           hbm_per_worker=32e9), sessions)
+        res[mode] = sim.run()
+    assert (res["prefillshare"]["prefix_hit_ratio"]
+            >= res["baseline"]["prefix_hit_ratio"] - 1e-9)

@@ -1,0 +1,111 @@
+"""Optimizer, data pipeline, and checkpoint tests (+ hypothesis properties)."""
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.training import data as D
+from repro.training.checkpoint import load, save
+from repro.training.optim import AdamW, apply_updates, warmup_cosine
+
+
+def test_adamw_minimizes_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = AdamW(0.1, weight_decay=0.0)
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_weight_decay_on_matrices_only():
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    opt = AdamW(1.0, weight_decay=0.5)
+    upd, _ = opt.update(g, opt.init(params), params)
+    assert float(jnp.abs(upd["w"]).sum()) > 0     # decayed
+    assert float(jnp.abs(upd["b"]).sum()) == 0    # vectors not decayed
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    opt = AdamW(1e-3, grad_clip=1.0)
+    upd, _ = opt.update(g, opt.init(params), params)
+    assert np.isfinite(np.asarray(upd["w"])).all()
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, 100, warmup_ratio=0.1)
+    assert float(lr(0)) < float(lr(10))
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(100)) < float(lr(50))
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "lst": [jnp.zeros(2), jnp.ones(3)]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt")
+        save(path, tree, meta={"step": 7})
+        restored = load(path, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+# ----------------------------------------------------------------------
+# data pipeline properties
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from(["math", "copy", "reverse", "lookup"]),
+       st.integers(4, 30), st.integers(4, 12), st.integers(0, 10_000))
+def test_answer_is_function_of_prompt(domain, plen, nsym, seed):
+    spec = D.TaskSpec(domain=domain, prompt_len=plen, n_symbols=nsym)
+    rng1 = np.random.default_rng(seed)
+    rng2 = np.random.default_rng(seed)
+    p1, a1 = D._gen_one(rng1, spec)
+    p2, a2 = D._gen_one(rng2, spec)
+    assert (p1 == p2).all() and (a1 == a2).all()
+    assert p1.min() >= D.SYM0 and p1.max() < D.SYM0 + nsym
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(["math", "copy", "lookup"]), st.integers(1, 8),
+       st.integers(0, 1000))
+def test_batch_alignment(domain, bs, seed):
+    spec = D.TaskSpec(domain=domain, prompt_len=8, n_symbols=6)
+    b = D.make_batch(np.random.default_rng(seed), spec, bs)
+    assert b.prompt.shape[0] == bs
+    # teacher forcing alignment: target_in shifted-right of target_out
+    for i in range(bs):
+        n = int(b.target_mask[i].sum())
+        assert b.target_in[i, 0] == D.SEP
+        assert (b.target_in[i, 1:n] == b.target_out[i, : n - 1]).all()
+        assert b.target_out[i, n - 1] == D.EOS
+        # prompt ends with SEP, starts (after padding) with BOS
+        row = b.prompt[i]
+        nz = row[row != D.PAD]
+        assert nz[0] == D.BOS and nz[-1] == D.SEP
+
+
+def test_answer_accuracy_metric():
+    pred = np.array([[5, 6, 3]])
+    tgt = np.array([[5, 6, 3]])
+    mask = np.ones((1, 3), np.float32)
+    assert D.answer_accuracy(pred, tgt, mask) == 1.0
+    pred2 = np.array([[5, 0, 3]])
+    assert D.answer_accuracy(pred2, tgt, mask) == 0.0
+    mask2 = np.array([[1, 0, 1]], np.float32)   # masked mismatch ignored
+    assert D.answer_accuracy(pred2, tgt, mask2) == 1.0
