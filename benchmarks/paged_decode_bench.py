@@ -1,0 +1,91 @@
+"""Batched paged decode vs the seed B=1 dense loop (acceptance benchmark).
+
+Same real models, same greedy outputs, two execution paths:
+
+  dense-B1  — the seed engine's path: dense per-session prefill, full-cache
+              ``transfer_cache`` handoff copy, then a Python B=1 decode loop
+              per sequence (one un-jitted forward per token per sequence).
+  paged     — the paged data plane: pool prefill + zero-copy block-table
+              handoff, then CONTINUOUS-BATCH decode (all sequences advance
+              one token per jitted batched step over the shared page pool).
+
+Prints tokens/s for both and the speedup; also cross-checks that both paths
+emit identical greedy tokens. Expected: >= 2x at batch >= 4 (batching removes
+the per-token Python/dispatch overhead; on TPU the paged Pallas kernel also
+amortizes each K/V page fetch across the GQA group).
+
+Usage: PYTHONPATH=src python -m benchmarks.paged_decode_bench [--batch 4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.serving.engine import LocalDisaggEngine
+
+CFG = ModelConfig(name="bench", arch_type="dense", n_layers=3, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                  dtype="float32")
+
+
+def main(batch: int = 4, gen: int = 32, ctx_len: int = 48, seed: int = 0):
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    decs = {"m0": init_params(CFG, jax.random.PRNGKey(7))}
+    rng = np.random.default_rng(seed)
+    ctxs = [list(rng.integers(4, 60, size=ctx_len + i)) for i in range(batch)]
+
+    # --- paged continuous batching -----------------------------------
+    eng = LocalDisaggEngine(CFG, base, decs, num_pages=2048)
+    rids = [eng.submit(sid, c, "m0", gen_tokens=gen)
+            for sid, c in enumerate(ctxs)]
+    t0 = time.perf_counter()
+    eng.run()
+    t_paged = time.perf_counter() - t0
+    paged_out = [eng.result(r) for r in rids]
+    paged_tps = batch * gen / t_paged
+
+    # --- seed path: dense handoff copy + B=1 loop --------------------
+    dense = LocalDisaggEngine(CFG, base, decs, capacity=1024, paged=False)
+    t_dense = 0.0
+    dense_out = []
+    for sid, c in enumerate(ctxs):
+        sc = dense.prefill_workers[0].prefill(sid, c)   # not timed: decode bench
+        from repro.kvcache.handoff import transfer_cache
+        cache = transfer_cache(sc.cache)
+        t0 = time.perf_counter()
+        dense_out.append(dense.decoders["m0"].generate(
+            cache, sc.n_tokens, 2, gen))
+        t_dense += time.perf_counter() - t0
+    dense_tps = batch * gen / t_dense
+
+    for a, b in zip(paged_out, dense_out):
+        np.testing.assert_array_equal(a, b)
+
+    rows = [{"path": "dense-B1", "tok_s": dense_tps, "batch": 1},
+            {"path": "paged-batched", "tok_s": paged_tps, "batch": batch}]
+    print("path,batch,tok_s")
+    for r in rows:
+        print(f"{r['path']},{r['batch']},{r['tok_s']:.1f}")
+    speedup = paged_tps / dense_tps
+    print(f"# speedup={speedup:.2f}x (greedy outputs identical, "
+          f"mean decode batch={eng.stats.decode_batch_mean:.1f}, "
+          f"handoff_bytes={eng.stats.handoff_bytes})")
+    return rows, speedup
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ctx", type=int, default=48)
+    args = ap.parse_args()
+    _, speedup = main(batch=args.batch, gen=args.gen, ctx_len=args.ctx)
+    assert speedup >= 2.0, f"batched paged decode only {speedup:.2f}x"

@@ -66,6 +66,29 @@ def base_prefill(cfg: ModelConfig, base_params: Params, tokens, *, cache_len: in
     return out, cache
 
 
+def base_prefill_paged(cfg: ModelConfig, base_params: Params, new_tokens, *,
+                       pool, block_table, n_cached: int, flash=None):
+    """Partial prefill against the paged data plane (§3.3 step 1, for real).
+
+    The cached prefix (``n_cached`` tokens, page-aligned by construction —
+    the prefix index matches whole blocks) is gathered out of ``pool`` via
+    ``block_table`` into a dense working cache; the frozen base model runs
+    over ``new_tokens`` only; the freshly produced KV rows are scattered back
+    into the pool's physical pages with the ``paged_write`` kernel. Returns
+    the last-token logits. B=1 (one request per call).
+    """
+    assert n_cached % pool.page_size == 0, "prefix reuse is page-granular"
+    cache = pool.gather_prefill_cache(block_table, n_cached)
+    out, cache = base_prefill(
+        cfg, base_params, new_tokens,
+        cache_len=len(block_table) * pool.page_size, cache=cache,
+        pos=jnp.array([n_cached], jnp.int32), flash=flash)
+    start = n_cached // pool.page_size
+    pool.scatter_from_dense(cache, block_table, start,
+                            len(block_table) - start)
+    return out
+
+
 # ======================================================================
 # Share-ratio mixing (Fig. 2 mechanism)
 

@@ -1,0 +1,24 @@
+"""Version-compat shims over the Pallas TPU API surface.
+
+The TPU compiler-params dataclass was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x) became ``pltpu.CompilerParams``
+(newer releases, as documented in the current Pallas guide). Every kernel in
+this package goes through :func:`tpu_compiler_params` so the same source
+compiles against either API.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Newer JAX exposes CompilerParams; 0.4.x calls it TPUCompilerParams.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params portably across JAX versions.
+
+    Typical use: ``compiler_params=tpu_compiler_params(
+    dimension_semantics=("parallel", "arbitrary"))``.
+    """
+    return _COMPILER_PARAMS_CLS(**kwargs)

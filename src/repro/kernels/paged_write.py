@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(tables_ref, nvalid_ref, new_k_ref, new_v_ref, kpool_ref,
             vpool_ref, kout_ref, vout_ref, *, page: int):
@@ -81,5 +83,9 @@ def paged_write(new_k, new_v, k_pages, v_pages, block_tables, n_valid, *,
         out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
                    jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
         input_output_aliases={4: 0, 5: 1},   # pools updated in place
+        # grid points may alias pool revisions (bt is data-dependent): keep
+        # the page axis sequential; requests are independent.
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables, n_valid, new_k, new_v, k_pages, v_pages)

@@ -2,4 +2,5 @@ from repro.kvcache.blocks import BlockPool, PoolExhausted
 from repro.kvcache.handoff import HandoffChannel, HandoffPlan, SchemaMismatch
 from repro.kvcache.manager import (Allocation, CacheManager,
                                    kv_bytes_per_token, state_bytes_per_seq)
+from repro.kvcache.paged import PagedKVPool
 from repro.kvcache.radix import PrefixIndex

@@ -31,12 +31,17 @@ class BlockPool:
         self._free = list(range(num_blocks - 1, -1, -1))
         self._refcount = [0] * num_blocks
         self._cached = OrderedDict()          # block_id -> None, LRU order
-        self._evict_cb = None                 # notify index on eviction
+        self._evict_cbs = []                  # notify indexes on eviction
         self.stats = PoolStats()
 
     # ------------------------------------------------------------------
-    def set_evict_callback(self, cb):
-        self._evict_cb = cb
+    def add_evict_callback(self, cb):
+        """Register an additional eviction listener.
+
+        A pool shared by several CacheManagers (one per prefill worker, each
+        with its own PrefixIndex) must notify EVERY index when a physical
+        page is reclaimed — any of them may hold a node for it."""
+        self._evict_cbs.append(cb)
 
     @property
     def free_count(self) -> int:
@@ -56,8 +61,8 @@ class BlockPool:
             if not self._free:
                 bid, _ = self._cached.popitem(last=False)  # LRU
                 self.stats.evictions += 1
-                if self._evict_cb:
-                    self._evict_cb(bid)
+                for cb in self._evict_cbs:
+                    cb(bid)
                 self._free.append(bid)
             bid = self._free.pop()
             self._refcount[bid] = 1

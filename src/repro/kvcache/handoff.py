@@ -43,6 +43,14 @@ class HandoffChannel:
         secs = b / self.bw * (self.staging_penalty if staged else 1.0)
         return HandoffPlan(bytes=b, seconds=secs, staged=staged)
 
+    def plan_paged(self, n_pages: int) -> HandoffPlan:
+        """Zero-copy handoff over the shared paged pool: the wire carries
+        ONLY the block-table reference (int32 page ids + length/schema
+        header); the KV pages themselves never move — the decode worker
+        reads them in place and refcounts keep them alive."""
+        b = 4 * n_pages + 16
+        return HandoffPlan(bytes=b, seconds=b / self.bw, staged=False)
+
     @staticmethod
     def check(producer: CacheSchema, consumer_expected: CacheSchema) -> None:
         if not producer.compatible_with(consumer_expected):

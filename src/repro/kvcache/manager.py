@@ -67,13 +67,22 @@ class Allocation:
 
 
 class CacheManager:
-    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int = 16):
+    def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int = 16,
+                 *, pool: BlockPool | None = None):
+        """``pool``: optionally share one physical BlockPool across several
+        managers (one per prefill worker). Block ids then index the SAME
+        physical page arrays (PagedKVPool), so pages allocated by any worker
+        are directly addressable by every decode worker — the zero-copy
+        handoff invariant. Each manager keeps its own PrefixIndex (prefix
+        locality stays per-worker, which is what the router trades off)."""
         self.cfg = cfg
-        self.pool = BlockPool(num_blocks, block_size)
-        self.index = PrefixIndex(block_size)
-        self.pool.set_evict_callback(self.index.remove_block)
+        if pool is None:
+            pool = BlockPool(num_blocks, block_size)
+        self.pool = pool
+        self.index = PrefixIndex(self.pool.block_size)
+        self.pool.add_evict_callback(self.index.remove_block)
         self.stats = CacheStats()
-        self.bytes_per_block = kv_bytes_per_token(cfg) * block_size
+        self.bytes_per_block = kv_bytes_per_token(cfg) * self.pool.block_size
 
     # ------------------------------------------------------------------
     def acquire(self, tokens) -> Allocation:
@@ -105,6 +114,14 @@ class CacheManager:
 
     def release(self, alloc: Allocation) -> None:
         self.pool.unref(alloc.blocks)
+
+    def record_hit(self, n_tokens: int) -> None:
+        """Account a request served ENTIRELY from resident pages without a
+        fresh allocation (e.g. a sibling fan-out reusing a live session's
+        block table). Keeps engine hit ratios on this manager's books."""
+        self.stats.lookups += 1
+        self.stats.hit_tokens += n_tokens
+        self.stats.total_tokens += n_tokens
 
     # ------------------------------------------------------------------
     @property

@@ -1,0 +1,178 @@
+"""PagedKVPool: the physical KV data plane behind the paged control plane.
+
+``BlockPool``/``PrefixIndex``/``CacheManager`` are the *control* plane —
+refcounts, LRU, prefix matching over abstract block ids. This module gives
+those ids physical storage: per-layer K/V page arrays shaped
+``(P, page_size, Hkv, head_dim)`` (stacked over the model's scanned layer
+groups), so a block id allocated by any prefill worker addresses real tensors
+readable by every decode worker. That is the zero-copy handoff invariant of
+the shared-prefill design: handing a request to a decode model moves a block
+table (a few bytes of page ids), never the KV itself.
+
+Data flow:
+  - prefill: ``gather_prefill_cache`` materializes the cached prefix as a
+    dense working cache (the compute plane for incremental attention), the
+    frozen base model extends it, and ``scatter_from_dense`` writes the fresh
+    page-aligned rows back into the pool via the ``paged_write`` Pallas
+    kernel (interpret mode off-TPU).
+  - decode: ``make_decode_cache`` wires the pool arrays + per-sequence block
+    tables into the model cache pytree; ``repro.models.attention`` then runs
+    the paged decode-attention step (Pallas kernel on TPU, jnp gather twin
+    elsewhere) and appends each generated token's KV to the sequence's
+    private tail page; ``absorb_decode_cache`` publishes the updated pages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.kernels.paged_write import paged_write
+
+
+def _interp(interpret):
+    return (jax.default_backend() != "tpu") if interpret is None else interpret
+
+
+class PagedKVPool:
+    """Per-layer physical K/V page arrays for a pure global-attention stack.
+
+    Layers mirror the model cache structure: full ``layer_pattern`` groups are
+    stacked on a leading axis (matching the ``lax.scan`` over groups in
+    ``repro.models.model.forward``), remainder tail layers are stored
+    individually.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_pages: int, page_size: int,
+                 dtype=None):
+        assert self.supports(cfg), (
+            f"paged KV plane requires a pure global-attention decoder "
+            f"(got pattern {cfg.layer_pattern}, encdec={cfg.is_encdec})")
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.hkv, self.hd = cfg.n_kv_heads, cfg.head_dim
+        dt = jnp.dtype(dtype or cfg.dtype)
+        pat = cfg.layer_pattern
+        self.n_full = cfg.n_layers // len(pat)
+        n_tail = cfg.n_layers % len(pat)
+
+        shape = (num_pages, page_size, self.hkv, self.hd)
+        self.k_groups = {f"pos{i}": jnp.zeros((self.n_full,) + shape, dt)
+                         for i in range(len(pat))} if self.n_full else {}
+        self.v_groups = {g: jnp.zeros_like(a) for g, a in self.k_groups.items()}
+        self.k_tail = [jnp.zeros(shape, dt) for _ in range(n_tail)]
+        self.v_tail = [jnp.zeros(shape, dt) for _ in range(n_tail)]
+
+    @staticmethod
+    def supports(cfg: ModelConfig) -> bool:
+        """True if every layer's sequence state is global-attention KV."""
+        return (all(k == ATTN for k in cfg.layer_kinds())
+                and not cfg.is_encdec and cfg.n_heads > 0
+                and cfg.input_mode == "tokens")
+
+    @property
+    def page_bytes(self) -> int:
+        per_layer = 2 * self.page_size * self.hkv * self.hd
+        return per_layer * self.cfg.n_layers * jnp.dtype(self.cfg.dtype).itemsize
+
+    # ------------------------------------------------------------------
+    # prefill side
+    # ------------------------------------------------------------------
+    def gather_prefill_cache(self, block_table, n_valid: int):
+        """Materialize a dense B=1 working cache whose first ``n_valid`` rows
+        come from the pool pages named by ``block_table`` (slots beyond
+        ``n_valid`` are masked via kpos=-1)."""
+        bt = jnp.asarray(block_table, jnp.int32)
+        T = len(block_table) * self.page_size
+        f = self.hkv * self.hd
+        ar = jnp.arange(T, dtype=jnp.int32)
+        kpos = jnp.where(ar < n_valid, ar, -1)[None]          # (1, T)
+
+        groups = {}
+        for g, kp in self.k_groups.items():
+            k = kp[:, bt].reshape(self.n_full, T, f)[:, None]  # (n_full,1,T,f)
+            v = self.v_groups[g][:, bt].reshape(self.n_full, T, f)[:, None]
+            groups[g] = {"k": k, "v": v,
+                         "kpos": jnp.broadcast_to(kpos, (self.n_full, 1, T))}
+        tail = [{"k": kt[bt].reshape(T, f)[None],
+                 "v": self.v_tail[i][bt].reshape(T, f)[None],
+                 "kpos": kpos}
+                for i, kt in enumerate(self.k_tail)]
+        return {"groups": groups, "tail": tail}
+
+    def scatter_from_dense(self, cache, block_table, start_page: int,
+                           n_new_pages: int, *, interpret=None):
+        """Write pages ``[start_page, start_page + n_new_pages)`` of a dense
+        B=1 working cache into their physical pool pages (paged_write kernel).
+
+        Rows are taken from the *updated* dense cache, so a page that was
+        partially cached before this prefill is rewritten whole — its old
+        rows were gathered into the dense cache first, making every write
+        page-aligned (the kernel's contract)."""
+        if n_new_pages <= 0:
+            return
+        page = self.page_size
+        interp = _interp(interpret)
+        bt_tail = jnp.asarray(
+            block_table[start_page:start_page + n_new_pages], jnp.int32)[None]
+        nvalid = jnp.full((1,), n_new_pages, jnp.int32)
+        s0, span = start_page * page, n_new_pages * page
+
+        def rows(leaf_k):                      # (..., 1, cap, f) -> new KV rows
+            return leaf_k[..., 0, s0:s0 + span, :].reshape(
+                leaf_k.shape[:-3] + (span, self.hkv, self.hd))
+
+        for g in self.k_groups:
+            kc, vc = rows(cache["groups"][g]["k"]), rows(cache["groups"][g]["v"])
+            ks, vs = [], []
+            for li in range(self.n_full):
+                kp, vp = paged_write(kc[li][None], vc[li][None],
+                                     self.k_groups[g][li], self.v_groups[g][li],
+                                     bt_tail, nvalid, interpret=interp)
+                ks.append(kp)
+                vs.append(vp)
+            self.k_groups[g] = jnp.stack(ks)
+            self.v_groups[g] = jnp.stack(vs)
+        for i in range(len(self.k_tail)):
+            kc, vc = rows(cache["tail"][i]["k"]), rows(cache["tail"][i]["v"])
+            self.k_tail[i], self.v_tail[i] = paged_write(
+                kc[None], vc[None], self.k_tail[i], self.v_tail[i],
+                bt_tail, nvalid, interpret=interp)
+
+    # ------------------------------------------------------------------
+    # decode side
+    # ------------------------------------------------------------------
+    def copy_page(self, src: int, dst: int):
+        """Copy-on-write: clone one physical page (all layers). Used when a
+        decode holder must append into a partially-filled shared page."""
+        for g in self.k_groups:
+            self.k_groups[g] = self.k_groups[g].at[:, dst].set(
+                self.k_groups[g][:, src])
+            self.v_groups[g] = self.v_groups[g].at[:, dst].set(
+                self.v_groups[g][:, src])
+        for i in range(len(self.k_tail)):
+            self.k_tail[i] = self.k_tail[i].at[dst].set(self.k_tail[i][src])
+            self.v_tail[i] = self.v_tail[i].at[dst].set(self.v_tail[i][src])
+
+    def make_decode_cache(self, block_tables):
+        """Wire the pool + per-sequence block tables into a model cache
+        pytree for a batched decode step (see attention.attn_apply)."""
+        bt = jnp.asarray(block_tables, jnp.int32)
+        groups = {g: {"k_pages": self.k_groups[g], "v_pages": self.v_groups[g],
+                      "block_tables": jnp.broadcast_to(
+                          bt, (self.n_full,) + bt.shape)}
+                  for g in self.k_groups}
+        tail = [{"k_pages": self.k_tail[i], "v_pages": self.v_tail[i],
+                 "block_tables": bt} for i in range(len(self.k_tail))]
+        return {"groups": groups, "tail": tail}
+
+    def absorb_decode_cache(self, new_cache):
+        """Publish the page arrays a decode step returned (functional update:
+        the step appended one KV row per sequence to its tail page)."""
+        for g in self.k_groups:
+            self.k_groups[g] = new_cache["groups"][g]["k_pages"]
+            self.v_groups[g] = new_cache["groups"][g]["v_pages"]
+        for i in range(len(self.k_tail)):
+            self.k_tail[i] = new_cache["tail"][i]["k_pages"]
+            self.v_tail[i] = new_cache["tail"][i]["v_pages"]

@@ -239,6 +239,49 @@ def attention(q, k, v, q_pos, k_pos, *, window: int = 0, softcap=None,
 
 
 # ======================================================================
+# Paged decode attention (shared-pool data plane)
+
+PAGED_CACHE_KEYS = ("k_pages", "v_pages", "block_tables")
+
+
+def paged_attention_step(q, k_pages, v_pages, block_tables, lengths, *,
+                         softcap=0.0):
+    """One decode step of attention over the paged KV pool.
+
+    q: (B, Hq, D); k/v_pages: (P, page, Hkv, D); block_tables: (B, npages);
+    lengths: (B,). Mosaic kernel on TPU; elsewhere the pure-jnp gather twin
+    (kernels.ref.ref_paged_decode) — same contract, XLA-lowerable, and
+    bit-compatible with the ``_direct`` dense path so paged and dense engines
+    produce identical greedy tokens.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels.paged_decode import paged_decode_attention
+        return paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                      lengths, softcap=softcap or 0.0)
+    from repro.kernels.ref import ref_paged_decode
+    return ref_paged_decode(q, k_pages, v_pages, block_tables, lengths,
+                            softcap=softcap or 0.0)
+
+
+def _paged_apply(p, q, k, v, cache, pos, cfg):
+    """Append one token's K/V to each sequence's (private) tail page, then
+    attend over the block table. q/k/v: post-rope (B, 1, H, D)."""
+    B = q.shape[0]
+    kp, vp, bt = (cache[key] for key in PAGED_CACHE_KEYS)
+    page = kp.shape[1]
+    pg = jnp.take_along_axis(bt, (pos // page)[:, None], axis=1)[:, 0]
+    slot = pos % page
+    # vectorized per-sequence scatter; tail pages are private per sequence
+    # (copy-on-write at handoff), so the (pg, slot) pairs never collide.
+    kp = kp.at[pg, slot].set(k[:, 0])
+    vp = vp.at[pg, slot].set(v[:, 0])
+    o = paged_attention_step(q[:, 0], kp, vp, bt, pos + 1,
+                             softcap=cfg.attn_softcap)
+    out = jnp.einsum("be,ed->bd", o.reshape(B, -1), p["wo"])[:, None]
+    return out, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+
+
+# ======================================================================
 # Attention block: projections + rope + cache plumbing
 
 
@@ -339,6 +382,15 @@ def attn_apply(p, x, cfg, kind, *, cache=None, pos=None, enc_out=None,
     q_pos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     q = apply_rope(q, q_pos, style=cfg.rope_style, theta=cfg.rope_theta)
     k = apply_rope(k, q_pos, style=cfg.rope_style, theta=cfg.rope_theta)
+
+    if cache is not None and "k_pages" in cache:
+        if S != 1:
+            raise NotImplementedError(
+                "paged cache path is decode-only (S=1); prefill goes through "
+                "base_prefill_paged (gather -> dense extend -> paged_write)")
+        if kind == LOCAL_ATTN:
+            raise NotImplementedError("paged cache requires global attention")
+        return _paged_apply(p, q, k, v, cache, pos, cfg)
 
     if cache is None:
         mask_qpos = q_pos if causal else jnp.full_like(

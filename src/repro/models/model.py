@@ -158,7 +158,9 @@ def _apply_layer(lp, x, cfg, kind, cache, pos, enc_out, flash, causal=True):
     if kind in (ATTN, LOCAL_ATTN):
         acache = None
         if cache is not None:
-            acache = {k: cache[k] for k in ("k", "v", "kpos")}
+            keys = (attn_mod.PAGED_CACHE_KEYS if "k_pages" in cache
+                    else ("k", "v", "kpos"))
+            acache = {k: cache[k] for k in keys}
         out, new_acache = attn_mod.attn_apply(
             lp["attn"], h, cfg, kind, cache=acache, pos=pos, causal=causal,
             flash=flash)

@@ -1,12 +1,37 @@
-"""Small-scale REAL-JAX disaggregated engine (integration-test twin of the
-simulator).
+"""Small-scale REAL-JAX disaggregated engine on a paged KV data plane.
 
-Runs actual models on CPU: a prefill worker hosting the frozen base model
-(per-session cache, incrementally extended — §3.3 partial prefill), a decode
-pool of task-specific cache-conditioned decoders, and a cache-handoff step
-that copies the base cache to the decode side with a schema check. Metrics
-(prefix hit tokens, handoff bytes) use the same CacheManager bookkeeping as
-the simulator, so the event-level logic is validated against real tensors.
+Runs actual models: a pool of prefill workers hosting the frozen base model
+(selected per-session by the PrefillRouter), one shared physical
+``PagedKVPool`` whose pages back every allocation the per-worker
+``CacheManager``s make, and a set of task-specific decode workers that run
+CONTINUOUS-BATCH greedy decode over the pool.
+
+Data plane (pure global-attention archs, the paper's operating point):
+  - prefill: the router picks a worker; its CacheManager matches the longest
+    cached prefix (radix, page-granular) and allocates physical pages for the
+    tail; ``base_prefill_paged`` gathers the prefix KV out of the pool,
+    extends it with the frozen base model, and scatters the fresh rows back
+    into the pages via the ``paged_write`` kernel. The allocation is held for
+    the whole session (released in ``end_session``), so a live session's
+    pages are never evictable.
+  - handoff: ZERO-COPY. The decode side receives a block-table reference and
+    takes a refcount on every page; a partially-filled tail page is cloned
+    first (page-level copy-on-write) so concurrent decoders can append
+    privately. ``handoff_bytes`` counts only the block-table metadata.
+  - decode: all active sequences (across sessions and decode models sharing
+    this config) advance one token per engine step; sequences of the same
+    decode model run as ONE batched forward using the paged decode-attention
+    step (Pallas kernel on TPU, jnp gather twin elsewhere), with generated KV
+    appended to freshly allocated private pages. Pages are freed only when
+    the last holder (prefill session or decode sequence) releases them.
+
+Archs with non-KV sequence state (SSM/recurrent/hybrid/enc-dec) fall back to
+the dense per-session path (``paged=False``), preserving the state-handoff
+semantics validated in tests/test_engine_ssm.py.
+
+Prefix-hit accounting comes from the SAME CacheManager bookkeeping the
+simulator uses (``Allocation.cached_tokens``), so engine and simulator stats
+share one accounting path.
 """
 from __future__ import annotations
 
@@ -17,17 +42,50 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.prefillshare import base_prefill, cache_schema
+from repro.core.prefillshare import (base_prefill, base_prefill_paged,
+                                     cache_schema)
+from repro.kvcache.blocks import BlockPool, PoolExhausted
 from repro.kvcache.handoff import HandoffChannel, transfer_cache
 from repro.kvcache.manager import CacheManager
+from repro.kvcache.paged import PagedKVPool
 from repro.models import forward
+from repro.serving.router import PrefillRouter
+
+# crude per-token prefill cost estimate used for router backlog bookkeeping
+_EST_S_PER_TOKEN = 1e-4
 
 
 @dataclass
 class SessionCache:
+    """Dense-path session state (SSM/hybrid/enc-dec fallback)."""
     cache: object
     n_tokens: int
     capacity: int
+    alloc: object = None          # held until end_session (residency == refs)
+
+
+@dataclass
+class PagedSession:
+    alloc: object                 # CacheManager Allocation, held for lifetime
+    block_table: list             # physical page per logical page
+    n_tokens: int
+    tokens: list                  # context (for sibling-submit fast path)
+
+
+@dataclass
+class DecodeSeq:
+    """One in-flight generation: a block-table reference into the shared
+    pool (zero-copy handoff) plus private pages for generated tokens."""
+    rid: int
+    sid: int
+    model_id: str
+    block_table: list
+    shared_blocks: list           # refcounted prefix pages (unref on finish)
+    private_blocks: list          # CoW tail + generated pages (drop on finish)
+    pos: int                      # tokens currently in the cache
+    next_token: int               # token whose KV the next step writes
+    remaining: int
+    out: list = field(default_factory=list)
 
 
 @dataclass
@@ -36,58 +94,139 @@ class EngineStats:
     prefill_tokens_reused: int = 0
     handoffs: int = 0
     handoff_bytes: int = 0
+    cow_page_copies: int = 0
+    decode_steps: int = 0
+    decode_tokens: int = 0
 
     @property
     def hit_ratio(self):
         tot = self.prefill_tokens_computed + self.prefill_tokens_reused
         return self.prefill_tokens_reused / tot if tot else 0.0
 
+    @property
+    def decode_batch_mean(self):
+        return self.decode_tokens / self.decode_steps if self.decode_steps else 0.0
+
+
+# ======================================================================
+# Prefill workers
+
 
 class PrefillWorker:
-    """Hosts the frozen base model; one incrementally-extended cache/session."""
+    """Paged prefill worker: frozen base model + per-worker CacheManager
+    (own radix index) over the engine's SHARED physical page pool."""
+
+    def __init__(self, wid: int, cfg: ModelConfig, base_params,
+                 kvpool: PagedKVPool, block_pool: BlockPool,
+                 stats: EngineStats):
+        self.wid = wid
+        self.cfg = cfg
+        self.base_params = base_params
+        self.kvpool = kvpool
+        self.mgr = CacheManager(cfg, block_pool.num_blocks,
+                                block_pool.block_size, pool=block_pool)
+        self.sessions: dict[int, PagedSession] = {}
+        self.stats = stats
+        self.backlog_s = 0.0      # router load signal (estimated work issued)
+
+    def prefill(self, sid: int, tokens) -> tuple[list, int]:
+        """Ensure pool pages cover ``tokens``; compute only the uncached
+        tail. Returns (block_table, n_tokens)."""
+        tokens = [int(t) for t in np.asarray(tokens)]
+        n = len(tokens)
+        sc = self.sessions.get(sid)
+        if sc is not None and sc.tokens == tokens:
+            # sibling submit of the identical context (e.g. several decode
+            # models fanning out over one turn): the session's pages already
+            # hold it — no acquire, no recompute, no fresh partial page.
+            self.mgr.record_hit(n)             # same accounting path
+            self.stats.prefill_tokens_reused += n
+            return list(sc.block_table), n
+        alloc = self.mgr.acquire(tokens)
+        n_cached = alloc.cached_tokens
+        bt = list(alloc.blocks)
+        if n_cached < n:
+            new = jnp.asarray(tokens[n_cached:], jnp.int32)[None]
+            base_prefill_paged(self.cfg, self.base_params, new,
+                               pool=self.kvpool, block_table=bt,
+                               n_cached=n_cached)
+        self.mgr.commit(tokens, alloc)
+        if sc is not None:
+            self.mgr.release(sc.alloc)     # swap, don't drop: new alloc holds
+        self.sessions[sid] = PagedSession(alloc, bt, n, tokens)
+        self.stats.prefill_tokens_computed += n - n_cached
+        self.stats.prefill_tokens_reused += n_cached
+        self.backlog_s += (n - n_cached) * _EST_S_PER_TOKEN
+        return bt, n
+
+    def end_session(self, sid: int):
+        sc = self.sessions.pop(sid, None)
+        if sc is not None:
+            self.mgr.release(sc.alloc)     # pages -> CACHED (LRU, reusable)
+
+
+class DensePrefillWorker:
+    """Dense fallback: one incrementally-extended cache per session (archs
+    whose sequence state is not paged KV). The page-level CacheManager still
+    runs for accounting, and — unlike the seed — the allocation is HELD for
+    the session lifetime so residency matches the refcounts."""
 
     def __init__(self, cfg: ModelConfig, base_params, *, capacity: int = 512,
-                 mgr_blocks: int = 4096, block_size: int = 16):
+                 mgr_blocks: int = 4096, block_size: int = 16,
+                 stats: EngineStats | None = None):
         self.cfg = cfg
         self.base_params = base_params
         self.schema = cache_schema(cfg, base_params, capacity)
+        self.capacity = capacity
         self.sessions: dict[int, SessionCache] = {}
         self.mgr = CacheManager(cfg, mgr_blocks, block_size)
-        self.stats = EngineStats()
+        self.stats = stats if stats is not None else EngineStats()
+        self.backlog_s = 0.0
 
-    def prefill(self, sid: int, tokens: np.ndarray) -> SessionCache:
-        """Ensure the session cache covers ``tokens``; compute only the tail."""
+    def prefill(self, sid: int, tokens) -> SessionCache:
         tokens = np.asarray(tokens)
         n = len(tokens)
         sc = self.sessions.get(sid)
         alloc = self.mgr.acquire(tokens.tolist())      # block-level metrics
         self.mgr.commit(tokens.tolist(), alloc)
-        self.mgr.release(alloc)
         if sc is None:
-            out, cache = base_prefill(
+            _, cache = base_prefill(
                 self.cfg, self.base_params, jnp.asarray(tokens)[None],
-                cache_len=max(self.schema.cache_len, n))
-            sc = SessionCache(cache, n, max(self.schema.cache_len, n))
+                cache_len=max(self.capacity, n))
+            new = SessionCache(cache, n, max(self.capacity, n), alloc)
             self.stats.prefill_tokens_computed += n
         else:
             assert n > sc.n_tokens, "context is append-only"
-            new = tokens[sc.n_tokens:]
+            fresh = tokens[sc.n_tokens:]
             _, cache = base_prefill(
-                self.cfg, self.base_params, jnp.asarray(new)[None],
+                self.cfg, self.base_params, jnp.asarray(fresh)[None],
                 cache_len=sc.capacity, cache=sc.cache,
                 pos=jnp.array([sc.n_tokens], jnp.int32))
-            self.stats.prefill_tokens_computed += len(new)
+            self.stats.prefill_tokens_computed += len(fresh)
             self.stats.prefill_tokens_reused += sc.n_tokens
-            sc = SessionCache(cache, n, sc.capacity)
-        self.sessions[sid] = sc
-        return sc
+            self.mgr.release(sc.alloc)
+            new = SessionCache(cache, n, sc.capacity, alloc)
+        self.sessions[sid] = new
+        self.backlog_s += n * _EST_S_PER_TOKEN
+        return new
 
     def end_session(self, sid: int):
-        self.sessions.pop(sid, None)
+        sc = self.sessions.pop(sid, None)
+        if sc is not None and sc.alloc is not None:
+            self.mgr.release(sc.alloc)
+
+
+# ======================================================================
+# Decode
 
 
 class DecodeWorker:
-    """Hosts ONE task-specific decode module (cache-conditioned)."""
+    """Hosts ONE task-specific decode module (cache-conditioned).
+
+    Paged mode: ``step`` advances every assigned sequence by one token in a
+    single batched forward (continuous batching over the shared pool).
+    Dense mode: ``generate`` is the legacy B=1 loop over a private cache.
+    """
 
     def __init__(self, cfg: ModelConfig, model_id: str, dec_params,
                  expected_schema):
@@ -95,11 +234,29 @@ class DecodeWorker:
         self.model_id = model_id
         self.dec_params = dec_params
         self.expected_schema = expected_schema
+        self._step = None
 
+    # ---- paged continuous batching ----
+    def step(self, tokens, pos, cache):
+        """One batched greedy step: feed ``tokens`` (B,) at positions ``pos``
+        (B,), paged cache attached; returns (next_tokens (B,), new_cache)."""
+        if self._step is None:
+            cfg = self.cfg
+
+            def _step(params, toks, pos, cache):
+                logits, new_cache, _ = forward(cfg, params, toks[:, None],
+                                               cache=cache, pos=pos)
+                return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+            # jit keyed on (B, npages) shapes; retraces only when the batch
+            # composition or table width changes.
+            self._step = jax.jit(_step)
+        return self._step(self.dec_params, tokens, pos, cache)
+
+    # ---- dense fallback ----
     def generate(self, cache, start_pos: int, first_token: int,
                  n_tokens: int) -> np.ndarray:
         cfg = self.cfg
-        B = 1
         pos = jnp.array([start_pos], jnp.int32)
         tok = jnp.array([first_token], jnp.int32)
         out = []
@@ -112,26 +269,168 @@ class DecodeWorker:
         return np.asarray(out, np.int32)
 
 
+# ======================================================================
+# Engine
+
+
 class LocalDisaggEngine:
-    """Proxy + prefill worker + heterogeneous decode pool (Appendix B.1)."""
+    """Proxy + prefill worker pool + heterogeneous decode pool over one
+    shared paged KV plane (Appendix B.1, upgraded to the §3.3 pipeline)."""
 
-    def __init__(self, cfg: ModelConfig, base_params, decoders: dict,
-                 *, capacity: int = 512):
+    def __init__(self, cfg: ModelConfig, base_params, decoders: dict, *,
+                 capacity: int = 512, paged: bool | None = None,
+                 num_pages: int = 1024, page_size: int = 16,
+                 n_prefill_workers: int = 1, router_policy: str = "pinned"):
         self.cfg = cfg
-        self.prefill = PrefillWorker(cfg, base_params, capacity=capacity)
+        self.page_size = page_size
+        self.stats = EngineStats()
+        self.paged = PagedKVPool.supports(cfg) if paged is None else paged
+        if self.paged and not PagedKVPool.supports(cfg):
+            raise ValueError(f"{cfg.name}: arch not eligible for paged plane")
+        self.schema = cache_schema(cfg, base_params, capacity)
         self.handoff = HandoffChannel(cfg)
+        self.router = PrefillRouter(n_prefill_workers, router_policy)
+        if self.paged:
+            self.block_pool = BlockPool(num_pages, page_size)
+            self.kvpool = PagedKVPool(cfg, num_pages, page_size)
+            self.prefill_workers = [
+                PrefillWorker(i, cfg, base_params, self.kvpool,
+                              self.block_pool, self.stats)
+                for i in range(n_prefill_workers)]
+        else:
+            self.block_pool = None
+            self.kvpool = None
+            self.prefill_workers = [
+                DensePrefillWorker(cfg, base_params, capacity=capacity,
+                                   block_size=page_size, stats=self.stats)
+                for _ in range(n_prefill_workers)]
+        self.prefill = self.prefill_workers[0]        # 1-worker convenience
         self.decoders = {
-            mid: DecodeWorker(cfg, mid, params, self.prefill.schema)
+            mid: DecodeWorker(cfg, mid, params, self.schema)
             for mid, params in decoders.items()}
-        self.stats = self.prefill.stats
+        self._pending: list[DecodeSeq] = []
+        self._results: dict[int, np.ndarray] = {}
+        self._next_rid = 0
 
+    # ------------------------------------------------------------------
+    def _pick_worker(self, sid: int):
+        # Prefill here is synchronous, so there is no literal queue; the
+        # routing signal is recency-weighted issued work. Decaying it each
+        # pick keeps least_loaded balancing while preventing spillover from
+        # permanently migrating pinned sessions off an idle worker just
+        # because its lifetime total is ahead.
+        for w in self.prefill_workers:
+            w.backlog_s *= 0.5
+        backlogs = [w.backlog_s for w in self.prefill_workers]
+        return self.prefill_workers[self.router.pick(sid, 0.0, backlogs)]
+
+    def submit(self, sid: int, context_tokens, model_id: str,
+               gen_tokens: int, first_token: int = 2) -> int:
+        """Prefill + zero-copy handoff; queue the sequence for continuous-
+        batch decode (drive with ``run``). Returns a request id."""
+        assert self.paged, "submit/run requires the paged data plane"
+        worker = self._pick_worker(sid)
+        bt, n = worker.prefill(sid, context_tokens)
+        dw = self.decoders[model_id]
+        HandoffChannel.check(self.schema, dw.expected_schema)
+
+        # --- zero-copy handoff: block-table reference + page refcounts ---
+        self.block_pool.ref(bt)
+        shared, private = list(bt), []
+        if n % self.page_size:
+            # partial tail page is shared with the prefill session (and any
+            # sibling decoder): clone it so this sequence can append.
+            last = bt[-1]
+            try:
+                [fresh] = self.block_pool.alloc(1)
+            except PoolExhausted:
+                self.block_pool.unref(bt)      # roll back the handoff refs
+                raise
+            self.kvpool.copy_page(last, fresh)
+            self.block_pool.unref([last])
+            shared.pop()
+            private.append(fresh)
+            bt = bt[:-1] + [fresh]
+            self.stats.cow_page_copies += 1
+        plan = self.handoff.plan_paged(len(bt))
+        self.stats.handoffs += 1
+        self.stats.handoff_bytes += plan.bytes         # metadata only
+
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(DecodeSeq(rid, sid, model_id, list(bt), shared,
+                                       private, n, first_token, gen_tokens))
+        return rid
+
+    def run(self) -> None:
+        """Continuous-batch decode: one token per active sequence per step,
+        batched per decode model, until every pending sequence finishes."""
+        while True:
+            still = []
+            for s in self._pending:
+                (still.append(s) if s.remaining > 0 else self._finish(s))
+            self._pending = still
+            if not self._pending:
+                return
+            by_model: dict[str, list[DecodeSeq]] = {}
+            for s in self._pending:
+                by_model.setdefault(s.model_id, []).append(s)
+            for mid, seqs in by_model.items():
+                self._batched_step(mid, seqs)
+
+    def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> None:
+        page = self.page_size
+        for s in seqs:                       # grow private tail pages
+            if s.pos >= len(s.block_table) * page:
+                [fresh] = self.block_pool.alloc(1)
+                s.block_table.append(fresh)
+                s.private_blocks.append(fresh)
+        npages = max(len(s.block_table) for s in seqs)
+        bt = np.zeros((len(seqs), npages), np.int32)
+        for i, s in enumerate(seqs):
+            bt[i, :len(s.block_table)] = s.block_table
+        toks = jnp.asarray([s.next_token for s in seqs], jnp.int32)
+        pos = jnp.asarray([s.pos for s in seqs], jnp.int32)
+        cache = self.kvpool.make_decode_cache(bt)
+        nxt, new_cache = self.decoders[mid].step(toks, pos, cache)
+        self.kvpool.absorb_decode_cache(new_cache)
+        nxt = np.asarray(nxt)
+        for i, s in enumerate(seqs):
+            s.out.append(int(nxt[i]))
+            s.next_token = int(nxt[i])
+            s.pos += 1
+            s.remaining -= 1
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += len(seqs)
+
+    def _finish(self, s: DecodeSeq) -> None:
+        self._results[s.rid] = np.asarray(s.out, np.int32)
+        self.block_pool.unref(s.shared_blocks)   # freed only w/ last holder
+        self.block_pool.drop(s.private_blocks)   # generated KV: not reusable
+
+    # ------------------------------------------------------------------
     def invoke(self, sid: int, context_tokens, model_id: str,
                gen_tokens: int, first_token: int = 2) -> np.ndarray:
         """One agent invocation: shared/partial prefill -> handoff ->
-        selective decode (paper §3.3 execution pipeline)."""
-        sc = self.prefill.prefill(sid, context_tokens)
+        selective decode (paper §3.3 execution pipeline). Drains every
+        pending sequence (batching this request with any prior submits)."""
+        if not self.paged:
+            return self._invoke_dense(sid, context_tokens, model_id,
+                                      gen_tokens, first_token)
+        rid = self.submit(sid, context_tokens, model_id, gen_tokens,
+                          first_token)
+        self.run()
+        return self._results.pop(rid)
+
+    def result(self, rid: int) -> np.ndarray:
+        return self._results.pop(rid)
+
+    def _invoke_dense(self, sid, context_tokens, model_id, gen_tokens,
+                      first_token):
+        worker = self._pick_worker(sid)
+        sc = worker.prefill(sid, context_tokens)
         dw = self.decoders[model_id]
-        HandoffChannel.check(self.prefill.schema, dw.expected_schema)
+        HandoffChannel.check(self.schema, dw.expected_schema)
         cache = transfer_cache(sc.cache)               # decode-side copy
         plan = self.handoff.plan(sc.n_tokens)
         self.stats.handoffs += 1
@@ -139,4 +438,5 @@ class LocalDisaggEngine:
         return dw.generate(cache, sc.n_tokens, first_token, gen_tokens)
 
     def end_session(self, sid: int):
-        self.prefill.end_session(sid)
+        for w in self.prefill_workers:
+            w.end_session(sid)

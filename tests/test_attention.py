@@ -1,4 +1,7 @@
 """Attention semantics: flash == direct, masks, positions, hypothesis sweeps."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests only")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

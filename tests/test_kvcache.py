@@ -1,6 +1,8 @@
 """KV cache subsystem: unit + hypothesis property tests on the invariants."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests only")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import get_config

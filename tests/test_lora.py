@@ -82,7 +82,7 @@ def test_lora_cache_conditioned_learns():
     tr2 = Trainer(loss_fn, AdamW(5e-3, weight_decay=0.0))
     feed = ({"prompt": b.prompt, "target_in": b.target_in,
              "target_out": b.target_out, "target_mask": b.target_mask}
-            for b in D.batches(1, spec, 48, 400))
+            for b in D.batches(1, spec, 48, 600))
     lora, losses = tr2.fit(lora, feed)
 
     dec = lora_apply(base, lora, rank=rank)

@@ -1,4 +1,7 @@
 """Hypothesis property tests on the serving simulator's conservation laws."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests only")
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings

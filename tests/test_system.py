@@ -134,6 +134,7 @@ def test_dryrun_results_if_present():
 
 def test_cache_pspec_properties():
     """Decode caches shard seq on model; long-context shards seq on both."""
+    pytest.importorskip("hypothesis", reason="optional dep")
     import hypothesis.strategies as st
     from hypothesis import given, settings
 

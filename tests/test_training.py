@@ -2,6 +2,9 @@
 import os
 import tempfile
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests only")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
