@@ -89,6 +89,42 @@ def base_prefill_paged(cfg: ModelConfig, base_params: Params, new_tokens, *,
     return out
 
 
+_CHUNK_STEPS: dict = {}
+
+
+def _make_chunk_step(cfg: ModelConfig):
+    def _step(params, toks, pos, cache):
+        _, new_cache, _ = forward(cfg, params, toks, cache=cache, pos=pos,
+                                  logits="hidden")
+        return new_cache
+    return jax.jit(_step)
+
+
+def base_prefill_chunk(cfg: ModelConfig, base_params: Params, tokens, *,
+                       pool, block_tables, pos):
+    """One chunked-prefill step against the paged plane (the scheduler's
+    prefill primitive).
+
+    Unlike ``base_prefill_paged`` there is NO dense gather of the prefix:
+    inside one jitted forward, each layer scatters the chunk's fresh K/V
+    rows into their pool pages and the chunk queries attend to prefix+self
+    straight from the pages (``flash_prefill_paged`` on TPU, the jnp gather
+    twin elsewhere). Batches chunks from several requests: ``tokens``
+    (B, S) int32, ``pos`` (B,) absolute start positions, ``block_tables``
+    (B, npages) zero-padded to a common width. Chunk start positions and
+    the cached-prefix boundary may land mid-page. Returns the updated-page
+    pytree (already absorbed into ``pool``) for completion sync.
+    """
+    if cfg not in _CHUNK_STEPS:
+        _CHUNK_STEPS[cfg] = _make_chunk_step(cfg)
+    step = _CHUNK_STEPS[cfg]
+    cache = pool.make_decode_cache(jnp.asarray(block_tables, jnp.int32))
+    new_cache = step(base_params, jnp.asarray(tokens, jnp.int32),
+                     jnp.asarray(pos, jnp.int32), cache)
+    pool.absorb_decode_cache(new_cache)
+    return new_cache
+
+
 # ======================================================================
 # Share-ratio mixing (Fig. 2 mechanism)
 

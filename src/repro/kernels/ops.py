@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.flash_prefill_paged import flash_prefill_paged
 from repro.kernels.paged_decode import paged_decode_attention
 
 
@@ -29,6 +30,18 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                       v.transpose(0, 2, 1, 3), causal=causal, window=window,
                       softcap=softcap, scale=scale, interpret=interp)
     return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale", "interpret"))
+def paged_prefill(q, k_pages, v_pages, block_tables, start, *,
+                  softcap: float = 0.0, scale=None,
+                  interpret: bool | None = None):
+    """Chunk-prefill attention over the paged pool: q (B, S, Hq, D) at
+    absolute positions ``start[b] + i`` attends to prefix + chunk straight
+    from the pages (no dense gather of the prefix)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return flash_prefill_paged(q, k_pages, v_pages, block_tables, start,
+                               softcap=softcap, scale=scale, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "scale", "interpret"))

@@ -57,6 +57,35 @@ def ref_paged_decode(q, k_pages, v_pages, block_tables, lengths, *,
     return o.reshape(B, Hq, D).astype(q.dtype)
 
 
+def ref_paged_prefill(q, k_pages, v_pages, block_tables, start, *,
+                      softcap: float = 0.0, scale: float | None = None):
+    """Chunk-prefill attention over pages: gather the block table into
+    contiguous KV, then a materialized causal softmax at absolute positions
+    (q[b, i] sits at ``start[b] + i``). Mirrors ``_direct``'s op ordering so
+    chunked and dense prefill agree token-for-token."""
+    B, S, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    npages = block_tables.shape[1]
+    g = Hq // Hkv
+    T = npages * page
+    scale = D ** -0.5 if scale is None else scale
+
+    k = k_pages[block_tables].reshape(B, T, Hkv, D)
+    v = v_pages[block_tables].reshape(B, T, Hkv, D)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None]     # (B, S)
+    kpos = jnp.arange(T, dtype=jnp.int32)                            # (T,)
+    mask = kpos[None, None, None, None, :] <= qpos[:, None, None, :, None]
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)
+
+
 def ref_paged_write(new_k, new_v, k_pages, v_pages, block_tables, n_valid):
     """Scatter new KV rows into assigned pages (numpy-style oracle)."""
     import numpy as np

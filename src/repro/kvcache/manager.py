@@ -108,6 +108,33 @@ class CacheManager:
         self.stats.total_tokens += n_tok
         return Allocation(cached_blocks, new_blocks, cached_tokens, n_tok)
 
+    def begin(self, tokens) -> Allocation:
+        """Chunk-granular admission: match + ref the cached prefix WITHOUT
+        allocating tail pages (those arrive via ``extend`` as prefill chunks
+        progress). Never raises PoolExhausted — taking refs on resident
+        pages cannot run the pool dry, so a request can always be admitted
+        and then backpressured at its first extend."""
+        tokens = list(tokens)
+        cached_blocks, cached_tokens = self.index.match(tokens)
+        assert cached_tokens % self.pool.block_size == 0, \
+            "prefix reuse is page-granular"
+        self.pool.ref(cached_blocks)
+        self.pool.touch(cached_blocks)
+        self.stats.lookups += 1
+        self.stats.hit_tokens += cached_tokens
+        self.stats.total_tokens += len(tokens)
+        return Allocation(cached_blocks, [], cached_tokens, len(tokens))
+
+    def extend(self, alloc: Allocation, n_pages: int) -> list:
+        """Grow an in-flight allocation by ``n_pages`` fresh pages (the pages
+        one prefill chunk spills into). PoolExhausted propagates — the
+        scheduler holds the chunk and retries once decode frees pages."""
+        if n_pages <= 0:
+            return []
+        new = self.pool.alloc(n_pages)
+        alloc.new_blocks.extend(new)
+        return new
+
     def commit(self, tokens, alloc: Allocation) -> None:
         """After prefill fills the new pages, publish them for prefix reuse."""
         self.index.insert(tokens, alloc.blocks)

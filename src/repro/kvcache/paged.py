@@ -34,6 +34,25 @@ def _interp(interpret):
     return (jax.default_backend() != "tpu") if interpret is None else interpret
 
 
+def _copy_page_impl(state, src, dst):
+    # group arrays are (n_full, P, page, Hkv, D): page axis 1; tail arrays
+    # are (P, page, Hkv, D): page axis 0.
+    def cp(a):
+        if a.ndim == 5:
+            return a.at[:, dst].set(a[:, src])
+        return a.at[dst].set(a[src])
+    return jax.tree.map(cp, state)
+
+
+# One fused, jitted update over the whole pool pytree; donating the pool
+# buffers lets XLA update the touched pages in place instead of copying the
+# pool per clone (donation is a no-op on backends that ignore it, so only
+# request it where it's honoured).
+_copy_page_jit = jax.jit(
+    _copy_page_impl,
+    donate_argnums=(0,) if jax.default_backend() == "tpu" else ())
+
+
 class PagedKVPool:
     """Per-layer physical K/V page arrays for a pure global-attention stack.
 
@@ -144,16 +163,16 @@ class PagedKVPool:
     # decode side
     # ------------------------------------------------------------------
     def copy_page(self, src: int, dst: int):
-        """Copy-on-write: clone one physical page (all layers). Used when a
-        decode holder must append into a partially-filled shared page."""
-        for g in self.k_groups:
-            self.k_groups[g] = self.k_groups[g].at[:, dst].set(
-                self.k_groups[g][:, src])
-            self.v_groups[g] = self.v_groups[g].at[:, dst].set(
-                self.v_groups[g][:, src])
-        for i in range(len(self.k_tail)):
-            self.k_tail[i] = self.k_tail[i].at[dst].set(self.k_tail[i][src])
-            self.v_tail[i] = self.v_tail[i].at[dst].set(self.v_tail[i][src])
+        """Copy-on-write: clone one physical page (all layers) in a SINGLE
+        jitted, donated update — one dispatch for the whole pool pytree
+        instead of an un-jitted ``.at[].set`` per layer array (which cost
+        O(pool) traffic per clone). Used when a decode holder must append
+        into a partially-filled shared page."""
+        state = {"kg": self.k_groups, "vg": self.v_groups,
+                 "kt": tuple(self.k_tail), "vt": tuple(self.v_tail)}
+        new = _copy_page_jit(state, jnp.int32(src), jnp.int32(dst))
+        self.k_groups, self.v_groups = new["kg"], new["vg"]
+        self.k_tail, self.v_tail = list(new["kt"]), list(new["vt"])
 
     def make_decode_cache(self, block_tables):
         """Wire the pool + per-sequence block tables into a model cache

@@ -263,21 +263,50 @@ def paged_attention_step(q, k_pages, v_pages, block_tables, lengths, *,
                             softcap=softcap or 0.0)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, start, *,
+                            softcap=0.0):
+    """Chunk-prefill attention over the paged KV pool.
+
+    q: (B, S, Hq, D) chunk queries at absolute positions ``start[b] + i``;
+    the chunk's own K/V rows are already in their pages. Mosaic kernel on
+    TPU; elsewhere the pure-jnp gather twin (kernels.ref.ref_paged_prefill)
+    — same contract and bit-compatible with the ``_direct`` dense path, so
+    chunked and unchunked prefill produce identical greedy tokens.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels.flash_prefill_paged import flash_prefill_paged
+        return flash_prefill_paged(q, k_pages, v_pages, block_tables, start,
+                                   softcap=softcap or 0.0)
+    from repro.kernels.ref import ref_paged_prefill
+    return ref_paged_prefill(q, k_pages, v_pages, block_tables, start,
+                             softcap=softcap or 0.0)
+
+
 def _paged_apply(p, q, k, v, cache, pos, cfg):
-    """Append one token's K/V to each sequence's (private) tail page, then
-    attend over the block table. q/k/v: post-rope (B, 1, H, D)."""
-    B = q.shape[0]
+    """Scatter the incoming tokens' K/V into their (private) pool pages,
+    then attend over the block table. q/k/v: post-rope (B, S, H, D).
+
+    S == 1 is the decode step (paged_attention_step); S > 1 is a prefill
+    chunk (paged_prefill_attention) — both read the prefix straight from the
+    pages, no dense gather.
+    """
+    B, S = q.shape[0], q.shape[1]
     kp, vp, bt = (cache[key] for key in PAGED_CACHE_KEYS)
     page = kp.shape[1]
-    pg = jnp.take_along_axis(bt, (pos // page)[:, None], axis=1)[:, 0]
-    slot = pos % page
-    # vectorized per-sequence scatter; tail pages are private per sequence
-    # (copy-on-write at handoff), so the (pg, slot) pairs never collide.
-    kp = kp.at[pg, slot].set(k[:, 0])
-    vp = vp.at[pg, slot].set(v[:, 0])
-    o = paged_attention_step(q[:, 0], kp, vp, bt, pos + 1,
-                             softcap=cfg.attn_softcap)
-    out = jnp.einsum("be,ed->bd", o.reshape(B, -1), p["wo"])[:, None]
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
+    pg = jnp.take_along_axis(bt, positions // page, axis=1)           # (B, S)
+    slot = positions % page
+    # vectorized scatter; written pages are private per sequence (fresh
+    # chunk pages / copy-on-write at handoff), so (pg, slot) never collide.
+    kp = kp.at[pg, slot].set(k)
+    vp = vp.at[pg, slot].set(v)
+    if S == 1:
+        o = paged_attention_step(q[:, 0], kp, vp, bt, pos + 1,
+                                 softcap=cfg.attn_softcap)[:, None]
+    else:
+        o = paged_prefill_attention(q, kp, vp, bt, pos,
+                                    softcap=cfg.attn_softcap)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), p["wo"])
     return out, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
 
 
@@ -384,10 +413,6 @@ def attn_apply(p, x, cfg, kind, *, cache=None, pos=None, enc_out=None,
     k = apply_rope(k, q_pos, style=cfg.rope_style, theta=cfg.rope_theta)
 
     if cache is not None and "k_pages" in cache:
-        if S != 1:
-            raise NotImplementedError(
-                "paged cache path is decode-only (S=1); prefill goes through "
-                "base_prefill_paged (gather -> dense extend -> paged_write)")
         if kind == LOCAL_ATTN:
             raise NotImplementedError("paged cache requires global attention")
         return _paged_apply(p, q, k, v, cache, pos, cfg)

@@ -6,6 +6,14 @@ Runs actual models: a pool of prefill workers hosting the frozen base model
 ``CacheManager``s make, and a set of task-specific decode workers that run
 CONTINUOUS-BATCH greedy decode over the pool.
 
+The run loop is owned by the chunked-prefill scheduler
+(``repro.serving.scheduler``): with ``chunked=True`` each step packs one
+decode token per active sequence plus as many prefill chunks as fit a
+per-step token budget (chunks attend to the cached prefix straight from the
+pool pages via ``flash_prefill_paged`` — no dense gather); with the default
+eager mode ``submit`` prefills whole prompts synchronously (the historical
+behaviour, kept bit-identical) and the scheduler steps decode only.
+
 Data plane (pure global-attention archs, the paper's operating point):
   - prefill: the router picks a worker; its CacheManager matches the longest
     cached prefix (radix, page-granular) and allocates physical pages for the
@@ -41,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import time
+
 from repro.configs.base import ModelConfig
 from repro.core.prefillshare import (base_prefill, base_prefill_paged,
                                      cache_schema)
@@ -49,10 +59,10 @@ from repro.kvcache.handoff import HandoffChannel, transfer_cache
 from repro.kvcache.manager import CacheManager
 from repro.kvcache.paged import PagedKVPool
 from repro.models import forward
+from repro.serving.backpressure import ThroughputEWMA
 from repro.serving.router import PrefillRouter
-
-# crude per-token prefill cost estimate used for router backlog bookkeeping
-_EST_S_PER_TOKEN = 1e-4
+from repro.serving.scheduler import (ChunkedScheduler, Request,
+                                     SchedulerConfig)
 
 
 @dataclass
@@ -128,6 +138,8 @@ class PrefillWorker:
         self.sessions: dict[int, PagedSession] = {}
         self.stats = stats
         self.backlog_s = 0.0      # router load signal (estimated work issued)
+        self.ewma = ThroughputEWMA()       # measured prefill s/token
+        self.pending_chunk_tokens = 0      # admitted-but-uncomputed (chunked)
 
     def prefill(self, sid: int, tokens) -> tuple[list, int]:
         """Ensure pool pages cover ``tokens``; compute only the uncached
@@ -147,16 +159,19 @@ class PrefillWorker:
         bt = list(alloc.blocks)
         if n_cached < n:
             new = jnp.asarray(tokens[n_cached:], jnp.int32)[None]
-            base_prefill_paged(self.cfg, self.base_params, new,
-                               pool=self.kvpool, block_table=bt,
-                               n_cached=n_cached)
+            t0 = time.perf_counter()
+            out = base_prefill_paged(self.cfg, self.base_params, new,
+                                     pool=self.kvpool, block_table=bt,
+                                     n_cached=n_cached)
+            jax.block_until_ready(out)
+            self.ewma.observe(n - n_cached, time.perf_counter() - t0)
         self.mgr.commit(tokens, alloc)
         if sc is not None:
             self.mgr.release(sc.alloc)     # swap, don't drop: new alloc holds
         self.sessions[sid] = PagedSession(alloc, bt, n, tokens)
         self.stats.prefill_tokens_computed += n - n_cached
         self.stats.prefill_tokens_reused += n_cached
-        self.backlog_s += (n - n_cached) * _EST_S_PER_TOKEN
+        self.backlog_s += (n - n_cached) * self.ewma.s_per_token
         return bt, n
 
     def end_session(self, sid: int):
@@ -182,6 +197,8 @@ class DensePrefillWorker:
         self.mgr = CacheManager(cfg, mgr_blocks, block_size)
         self.stats = stats if stats is not None else EngineStats()
         self.backlog_s = 0.0
+        self.ewma = ThroughputEWMA()
+        self.pending_chunk_tokens = 0
 
     def prefill(self, sid: int, tokens) -> SessionCache:
         tokens = np.asarray(tokens)
@@ -189,10 +206,13 @@ class DensePrefillWorker:
         sc = self.sessions.get(sid)
         alloc = self.mgr.acquire(tokens.tolist())      # block-level metrics
         self.mgr.commit(tokens.tolist(), alloc)
+        t0 = time.perf_counter()
         if sc is None:
             _, cache = base_prefill(
                 self.cfg, self.base_params, jnp.asarray(tokens)[None],
                 cache_len=max(self.capacity, n))
+            jax.block_until_ready(cache)
+            self.ewma.observe(n, time.perf_counter() - t0)
             new = SessionCache(cache, n, max(self.capacity, n), alloc)
             self.stats.prefill_tokens_computed += n
         else:
@@ -202,12 +222,14 @@ class DensePrefillWorker:
                 self.cfg, self.base_params, jnp.asarray(fresh)[None],
                 cache_len=sc.capacity, cache=sc.cache,
                 pos=jnp.array([sc.n_tokens], jnp.int32))
+            jax.block_until_ready(cache)
+            self.ewma.observe(len(fresh), time.perf_counter() - t0)
             self.stats.prefill_tokens_computed += len(fresh)
             self.stats.prefill_tokens_reused += sc.n_tokens
             self.mgr.release(sc.alloc)
             new = SessionCache(cache, n, sc.capacity, alloc)
         self.sessions[sid] = new
-        self.backlog_s += n * _EST_S_PER_TOKEN
+        self.backlog_s += n * self.ewma.s_per_token
         return new
 
     def end_session(self, sid: int):
@@ -280,10 +302,14 @@ class LocalDisaggEngine:
     def __init__(self, cfg: ModelConfig, base_params, decoders: dict, *,
                  capacity: int = 512, paged: bool | None = None,
                  num_pages: int = 1024, page_size: int = 16,
-                 n_prefill_workers: int = 1, router_policy: str = "pinned"):
+                 n_prefill_workers: int = 1, router_policy: str = "pinned",
+                 chunked: bool = False, token_budget: int = 256,
+                 chunk_size: int = 64, sched_policy: str = "fcfs"):
         self.cfg = cfg
+        self.base_params = base_params
         self.page_size = page_size
         self.stats = EngineStats()
+        self.chunked = chunked
         self.paged = PagedKVPool.supports(cfg) if paged is None else paged
         if self.paged and not PagedKVPool.supports(cfg):
             raise ValueError(f"{cfg.name}: arch not eligible for paged plane")
@@ -308,33 +334,38 @@ class LocalDisaggEngine:
         self.decoders = {
             mid: DecodeWorker(cfg, mid, params, self.schema)
             for mid, params in decoders.items()}
-        self._pending: list[DecodeSeq] = []
+        self.scheduler = ChunkedScheduler(
+            self, SchedulerConfig(token_budget=token_budget,
+                                  chunk_size=chunk_size,
+                                  policy=sched_policy))
         self._results: dict[int, np.ndarray] = {}
         self._next_rid = 0
+        self._next_seq = 0
 
     # ------------------------------------------------------------------
     def _pick_worker(self, sid: int):
         # Prefill here is synchronous, so there is no literal queue; the
-        # routing signal is recency-weighted issued work. Decaying it each
-        # pick keeps least_loaded balancing while preventing spillover from
-        # permanently migrating pinned sessions off an idle worker just
-        # because its lifetime total is ahead.
+        # routing signal is recency-weighted issued work plus (in chunked
+        # mode) the admitted-but-uncomputed chunk backlog, both priced at
+        # the worker's MEASURED s/token EWMA. Decaying the issued-work term
+        # each pick keeps least_loaded balancing while preventing spillover
+        # from permanently migrating pinned sessions off an idle worker
+        # just because its lifetime total is ahead.
         for w in self.prefill_workers:
             w.backlog_s *= 0.5
-        backlogs = [w.backlog_s for w in self.prefill_workers]
+        backlogs = [w.backlog_s + w.ewma.backlog_seconds(w.pending_chunk_tokens)
+                    for w in self.prefill_workers]
         return self.prefill_workers[self.router.pick(sid, 0.0, backlogs)]
 
-    def submit(self, sid: int, context_tokens, model_id: str,
-               gen_tokens: int, first_token: int = 2) -> int:
-        """Prefill + zero-copy handoff; queue the sequence for continuous-
-        batch decode (drive with ``run``). Returns a request id."""
-        assert self.paged, "submit/run requires the paged data plane"
-        worker = self._pick_worker(sid)
-        bt, n = worker.prefill(sid, context_tokens)
+    def _handoff_seq(self, block_table, n: int, sid: int, model_id: str,
+                     gen_tokens: int, first_token: int, rid: int) -> DecodeSeq:
+        """Zero-copy handoff: block-table reference + page refcounts, with a
+        page-level copy-on-write clone of a partially-filled tail page so the
+        decode sequence can append privately. Raises PoolExhausted (with the
+        handoff refs rolled back) if the clone page cannot be allocated."""
         dw = self.decoders[model_id]
         HandoffChannel.check(self.schema, dw.expected_schema)
-
-        # --- zero-copy handoff: block-table reference + page refcounts ---
+        bt = list(block_table)
         self.block_pool.ref(bt)
         shared, private = list(bt), []
         if n % self.page_size:
@@ -355,28 +386,46 @@ class LocalDisaggEngine:
         plan = self.handoff.plan_paged(len(bt))
         self.stats.handoffs += 1
         self.stats.handoff_bytes += plan.bytes         # metadata only
+        return DecodeSeq(rid, sid, model_id, bt, shared, private, n,
+                         first_token, gen_tokens)
 
+    def submit(self, sid: int, context_tokens, model_id: str,
+               gen_tokens: int, first_token: int = 2,
+               priority: int = 0) -> int:
+        """Queue one generation request; drive with ``run`` (or ``step``).
+        Returns a request id.
+
+        Chunked mode: the request enters the scheduler's admission queue and
+        its prompt is prefilled in token-budget chunks interleaved with
+        decode, ordered by ``priority`` under the priority policy. Legacy
+        mode: whole-prompt prefill + handoff happen here, synchronously and
+        in call order, so ``priority`` has no effect."""
+        assert self.paged, "submit/run requires the paged data plane"
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(DecodeSeq(rid, sid, model_id, list(bt), shared,
-                                       private, n, first_token, gen_tokens))
+        tokens = [int(t) for t in np.asarray(context_tokens)]
+        if self.chunked:
+            self.scheduler.add(Request(
+                rid=rid, sid=sid, model_id=model_id, tokens=tokens,
+                gen_tokens=gen_tokens, first_token=first_token,
+                priority=priority, seq=self._next_seq))
+            self._next_seq += 1
+            return rid
+        worker = self._pick_worker(sid)
+        bt, n = worker.prefill(sid, tokens)
+        self.scheduler.add_decode_seq(self._handoff_seq(
+            bt, n, sid, model_id, gen_tokens, first_token, rid))
         return rid
 
     def run(self) -> None:
-        """Continuous-batch decode: one token per active sequence per step,
-        batched per decode model, until every pending sequence finishes."""
-        while True:
-            still = []
-            for s in self._pending:
-                (still.append(s) if s.remaining > 0 else self._finish(s))
-            self._pending = still
-            if not self._pending:
-                return
-            by_model: dict[str, list[DecodeSeq]] = {}
-            for s in self._pending:
-                by_model.setdefault(s.model_id, []).append(s)
-            for mid, seqs in by_model.items():
-                self._batched_step(mid, seqs)
+        """Drive the scheduler until every queued request finishes: each step
+        packs (one decode token per active sequence) + (prefill chunks under
+        the token budget) — see serving/scheduler/."""
+        self.scheduler.run()
+
+    def step(self) -> None:
+        """One scheduler step (benchmarks/tests interleave arrivals)."""
+        self.scheduler.step()
 
     def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> None:
         page = self.page_size

@@ -31,7 +31,13 @@ class PrefillRouter:
         self.spill = spill_threshold_s
 
     def pick(self, sid: int, now: float, backlogs) -> int:
-        """backlogs: per-worker estimated seconds of queued work."""
+        """backlogs: per-worker estimated seconds of queued work.
+
+        The engine prices this signal with a MEASURED per-worker s/token
+        EWMA (serving.backpressure.ThroughputEWMA) over both eager issued
+        work and, in chunked mode, the admitted-but-uncomputed chunk
+        backlog — so spillover thresholds compare real seconds, not a
+        hardcoded per-token constant."""
         home = sid % self.n
         if self.policy == "pinned":
             return home

@@ -1,0 +1,14 @@
+"""Chunked-prefill scheduler subsystem: token-budget step batching.
+
+See ``scheduler.py`` for the step loop and ``queue.py`` for admission
+ordering policies. The engine (``repro.serving.engine``) delegates its run
+loop here; the paged data plane it schedules over lives in
+``repro.kvcache`` and the per-chunk attention kernel in
+``repro.kernels.flash_prefill_paged``.
+"""
+from repro.serving.scheduler.queue import POLICIES, order_requests
+from repro.serving.scheduler.scheduler import (ChunkedScheduler, Request,
+                                               SchedStats, SchedulerConfig)
+
+__all__ = ["ChunkedScheduler", "Request", "SchedStats", "SchedulerConfig",
+           "POLICIES", "order_requests"]

@@ -1,0 +1,24 @@
+"""Admission ordering policies for the chunked-prefill scheduler.
+
+fcfs      — strict arrival order (the default; matches the simulator's FIFO
+            prefill workers, so sim and engine share queueing semantics).
+priority  — higher ``Request.priority`` first, arrival order within a class.
+            Starvation-bounded only by the caller giving equal priorities.
+
+The policy orders BOTH admission (waiting -> prefilling) and per-step chunk
+budget allocation: under a tight token budget, the head of the order gets its
+chunk first, so a high-priority long prompt cannot be head-of-line-blocked by
+lower-priority traffic (and vice versa under fcfs, everyone progresses in
+arrival order one budget slice at a time).
+"""
+from __future__ import annotations
+
+POLICIES = ("fcfs", "priority")
+
+
+def order_requests(requests, policy: str):
+    """Return ``requests`` in scheduling order (stable)."""
+    assert policy in POLICIES, policy
+    if policy == "fcfs":
+        return sorted(requests, key=lambda r: r.seq)
+    return sorted(requests, key=lambda r: (-r.priority, r.seq))

@@ -1,0 +1,320 @@
+"""Continuous token-budget step scheduler: the engine's run loop.
+
+Every engine step packs, under one per-step token budget:
+  - one decode token for EVERY active sequence (decode is never starved —
+    each active sequence reserves one budget token), and
+  - as many prefill CHUNKS as fit the remaining budget, split off waiting
+    prompts at ``chunk_size`` granularity in policy order (fcfs/priority).
+
+Long prompts therefore stop head-of-line-blocking the decode plane: a 10k
+prompt becomes many budget-sized slices interleaved with everyone else's
+decode steps, instead of one monolithic forward that stalls every sequence
+behind it (the paper's prefill-decode interference, and the top ROADMAP item).
+
+Data plane per chunk: pages are allocated CHUNK-GRANULARLY (``CacheManager
+.extend`` — only the pages this chunk spills into, so a request's pool
+footprint grows with progress, not with prompt length), and the chunk runs
+through ``base_prefill_chunk``: one jitted forward in which each layer
+scatters its fresh K/V into the pages and attends prefix+self straight from
+the pool via ``flash_prefill_paged`` — no dense gather of the prefix, ever.
+Equal-length chunks from different requests batch into ONE base-model
+forward.
+
+Backpressure is wired to the existing pool machinery: ``PoolExhausted`` on a
+chunk's page growth (or on the handoff's CoW clone) holds that request —
+pages it already computed stay put — and retries after decode steps free
+pages; a step that can make no progress at all raises ``PoolExhausted``
+rather than spinning.
+
+The same object also runs the legacy eager mode (chunking off): ``submit``
+prefills whole prompts synchronously and the scheduler's step is decode-only
+— semantically today's engine, which is what the chunked path is tested
+bit-identical against.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.prefillshare import base_prefill_chunk
+from repro.kvcache.blocks import PoolExhausted
+from repro.serving.scheduler.queue import POLICIES, order_requests
+
+
+@dataclass
+class SchedulerConfig:
+    token_budget: int = 256      # per-step cap: decode tokens + chunk tokens
+    chunk_size: int = 64         # max prefill tokens per request per step
+    policy: str = "fcfs"         # fcfs | priority (queue.py)
+
+    def __post_init__(self):
+        assert self.token_budget > 0 and self.chunk_size > 0
+        assert self.policy in POLICIES, self.policy
+
+
+@dataclass
+class SchedStats:
+    steps: int = 0
+    chunks: int = 0
+    chunk_tokens: int = 0
+    stalls: int = 0              # chunk/handoff attempts deferred on pool pressure
+    max_prefill_batch: int = 0   # widest batched chunk forward
+
+
+@dataclass(eq=False)             # identity equality: list.remove stays O(1)
+class Request:
+    """One submitted generation request moving WAITING -> PREFILL -> DECODE."""
+    rid: int
+    sid: int
+    model_id: str
+    tokens: list
+    gen_tokens: int
+    first_token: int
+    priority: int
+    seq: int                     # arrival order (fcfs tiebreak)
+    tok_hash: int = 0            # precomputed hash of tokens (sibling check)
+    worker: object = None        # PrefillWorker, assigned at admission
+    alloc: object = None         # CacheManager Allocation (chunk-granular)
+    block_table: list = field(default_factory=list)
+    done: int = 0                # tokens whose KV is in pages (incl. cached)
+    committed: bool = False      # published to the radix index / session
+    sibling_bt: list | None = None   # identical-context fast path block table
+
+    def __post_init__(self):
+        self.tok_hash = hash(tuple(self.tokens))
+
+    @property
+    def n(self) -> int:
+        return len(self.tokens)
+
+
+class ChunkedScheduler:
+    """Owns the engine step loop (both chunked and legacy-eager modes)."""
+
+    def __init__(self, engine, cfg: SchedulerConfig):
+        self.engine = engine
+        self.cfg = cfg
+        self.waiting: list[Request] = []
+        self.prefilling: list[Request] = []
+        self.active: list = []           # DecodeSeqs (engine dataclass)
+        self.stats = SchedStats()
+        self.promoted: list[int] = []    # rids in prefill-completion order
+
+    # ------------------------------------------------------------------
+    def add(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def add_decode_seq(self, seq) -> None:
+        """Register an already-prefilled sequence (legacy eager submit)."""
+        self.active.append(seq)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.prefilling or self.active)
+
+    def run(self) -> None:
+        while self.has_work():
+            self.step()
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine step: admit; pack prefill chunks under the budget;
+        promote finished prefills (zero-copy handoff); advance every active
+        sequence one decode token."""
+        self.stats.steps += 1
+        progress = self._admit()
+        budget = self.cfg.token_budget - len(self.active)
+        chunks = self._plan_chunks(budget)
+        progress += self._run_chunks(chunks)
+        progress += self._promote()
+        progress += self._decode_phase()
+        if progress == 0 and (self.waiting or self.prefilling):
+            raise PoolExhausted(
+                f"scheduler stalled: {len(self.waiting)} waiting / "
+                f"{len(self.prefilling)} prefilling requests cannot obtain "
+                f"pages and no decode is active to free any")
+
+    # ---- admission ----------------------------------------------------
+    def _admit(self) -> int:
+        admitted = 0
+        for r in order_requests(list(self.waiting), self.cfg.policy):
+            # hold a request whose identical context is already in flight:
+            # once the leader promotes, the session fast path serves it
+            # without recomputing (mirrors the eager sibling-submit path).
+            # Hash-only compare: a collision just delays admission one step;
+            # the session fast path below rechecks the exact tokens.
+            if any(p.sid == r.sid and p.tok_hash == r.tok_hash
+                   for p in self.prefilling):
+                continue
+            self.waiting.remove(r)
+            w = self.engine._pick_worker(r.sid)
+            r.worker = w
+            sc = w.sessions.get(r.sid)
+            if sc is not None and sc.tokens == r.tokens:
+                # identical-context sibling: the session's pages already hold
+                # it — no allocation, no chunks, straight to promote. Pin the
+                # pages NOW (promotion may be deferred under pool pressure,
+                # and the leader session could end in that window, leaving
+                # them evictable); the pin is dropped after the handoff takes
+                # its own refs.
+                self.engine.block_pool.ref(sc.block_table)
+                w.mgr.record_hit(r.n)
+                self.engine.stats.prefill_tokens_reused += r.n
+                r.sibling_bt = list(sc.block_table)
+                r.done = r.n
+            else:
+                r.alloc = w.mgr.begin(r.tokens)
+                r.block_table = list(r.alloc.cached_blocks)
+                r.done = r.alloc.cached_tokens
+                self.engine.stats.prefill_tokens_reused += r.done
+                w.pending_chunk_tokens += r.n - r.done
+            self.prefilling.append(r)
+            admitted += 1
+        return admitted
+
+    # ---- prefill chunk packing ----------------------------------------
+    def _plan_chunks(self, budget: int):
+        """Split pending prompts into (request, start, take) chunks, policy
+        order, chunk-granular page growth; pool pressure defers a request."""
+        page = self.engine.page_size
+        chunks = []
+        # prefill never takes the pool below the pages active decodes are
+        # still entitled to (worst-case tail growth), so chunking cannot
+        # starve the decode plane mid-flight
+        reserve = self._decode_reserve()
+        pool = self.engine.block_pool
+        pending = [r for r in self.prefilling
+                   if r.done < r.n and r.sibling_bt is None]
+        for r in order_requests(pending, self.cfg.policy):
+            if budget <= 0:
+                break
+            take = min(self.cfg.chunk_size, r.n - r.done, budget)
+            need = -(-(r.done + take) // page) - len(r.block_table)
+            if need > 0:
+                if pool.free_count - need < reserve:
+                    self.stats.stalls += 1
+                    continue          # hold; decode may free pages
+                try:
+                    fresh = r.worker.mgr.extend(r.alloc, need)
+                except PoolExhausted:
+                    self.stats.stalls += 1
+                    continue
+                r.block_table.extend(fresh)
+            chunks.append((r, r.done, take))
+            budget -= take
+        return chunks
+
+    def _run_chunks(self, chunks) -> int:
+        """Execute planned chunks; equal-length chunks from different
+        requests run as ONE batched base-model forward over the pool."""
+        if not chunks:
+            return 0
+        eng = self.engine
+        groups: dict[int, list] = {}
+        for r, start, take in chunks:
+            groups.setdefault(take, []).append((r, start))
+        for S, items in groups.items():
+            B = len(items)
+            npages = max(len(r.block_table) for r, _ in items)
+            toks = np.zeros((B, S), np.int32)
+            bt = np.zeros((B, npages), np.int32)
+            pos = np.zeros((B,), np.int32)
+            for i, (r, start) in enumerate(items):
+                toks[i] = r.tokens[start:start + S]
+                bt[i, :len(r.block_table)] = r.block_table
+                pos[i] = start
+            t0 = time.perf_counter()
+            out = base_prefill_chunk(eng.cfg, eng.base_params, toks,
+                                     pool=eng.kvpool, block_tables=bt,
+                                     pos=pos)
+            jax.block_until_ready(out)
+            dt = time.perf_counter() - t0
+            for r, _ in items:
+                r.done += S
+                r.worker.pending_chunk_tokens -= S
+                r.worker.ewma.observe(S, dt / B)
+            eng.stats.prefill_tokens_computed += B * S
+            self.stats.chunks += B
+            self.stats.chunk_tokens += B * S
+            self.stats.max_prefill_batch = max(self.stats.max_prefill_batch, B)
+        return len(chunks)
+
+    def _decode_reserve(self) -> int:
+        """Pages the active decode sequences are still entitled to: the
+        worst-case tail growth each committed-to generation may yet need.
+        Prefill chunking and decode admission both stay above this line, so
+        a running generation can never hit PoolExhausted mid-flight."""
+        page = self.engine.page_size
+        return sum(
+            max(0, -(-(s.pos + s.remaining) // page) - len(s.block_table))
+            for s in self.active)
+
+    # ---- prefill -> decode handoff -------------------------------------
+    def _promote(self) -> int:
+        promoted = 0
+        page = self.engine.page_size
+        pool = self.engine.block_pool
+        for r in list(self.prefilling):
+            if r.done < r.n:
+                continue
+            # decode admission control: the handoff's CoW clone plus THIS
+            # sequence's worst-case tail growth must fit above the pages
+            # already-running decodes are entitled to — otherwise admitting
+            # it could deadlock every generation mid-flight
+            cow = 1 if r.n % page else 0
+            growth = -(-(r.n + r.gen_tokens) // page) - (-(-r.n // page))
+            if pool.free_count - cow - growth < self._decode_reserve():
+                self.stats.stalls += 1
+                continue
+            bt = r.sibling_bt
+            if bt is None:
+                if not r.committed:
+                    # publish for prefix reuse + session bookkeeping, exactly
+                    # once (the handoff below may retry under pool pressure)
+                    from repro.serving.engine import PagedSession
+                    w = r.worker
+                    w.mgr.commit(r.tokens, r.alloc)
+                    old = w.sessions.get(r.sid)
+                    w.sessions[r.sid] = PagedSession(
+                        r.alloc, list(r.block_table), r.n, list(r.tokens))
+                    if old is not None:
+                        w.mgr.release(old.alloc)
+                    r.committed = True
+                bt = r.block_table
+            try:
+                seq = self.engine._handoff_seq(
+                    bt, r.n, r.sid, r.model_id, r.gen_tokens,
+                    r.first_token, r.rid)
+            except PoolExhausted:
+                self.stats.stalls += 1   # CoW clone page unavailable: retry
+                continue
+            if r.sibling_bt is not None:
+                pool.unref(r.sibling_bt)   # handoff holds its own refs now
+            self.prefilling.remove(r)
+            self.active.append(seq)
+            self.promoted.append(r.rid)
+            promoted += 1
+        return promoted
+
+    # ---- decode --------------------------------------------------------
+    def _decode_phase(self) -> int:
+        eng = self.engine
+        still = []
+        finished = 0
+        for s in self.active:
+            if s.remaining > 0:
+                still.append(s)
+            else:
+                eng._finish(s)
+                finished += 1
+        self.active = still
+        if not self.active:
+            return finished
+        by_model: dict[str, list] = {}
+        for s in self.active:
+            by_model.setdefault(s.model_id, []).append(s)
+        for mid, seqs in by_model.items():
+            eng._batched_step(mid, seqs)
+        return finished + len(self.active)

@@ -53,6 +53,11 @@ class ServingConfig:
     b2_policy: str = "staging"   # staging | admission | backpressure | reservation
                                  # (Appendix B.2 alternatives; see backpressure.py)
     router_policy: str = "pinned"  # pinned | least_loaded | spillover (router.py)
+    prefill_chunk_tokens: int = 0  # 0 = whole-prompt service; >0 = chunked
+                                   # prefill (round-robin between queued
+                                   # requests at chunk granularity — the
+                                   # same token-budget slicing the real
+                                   # engine's scheduler performs)
 
 
 @dataclass
@@ -80,17 +85,25 @@ class _SessionState:
 
 
 class _PrefillWorker:
-    """Single-server FIFO prefill worker with a paged prefix cache."""
+    """Single-server FIFO prefill worker with a paged prefix cache.
 
-    def __init__(self, wid, cfg, cost, pool_bytes, block_size):
+    ``chunk_tokens > 0`` models the real engine's chunked scheduler: a
+    request is serviced in chunk-sized time slices and re-queued at the TAIL
+    between slices, so a long prompt no longer head-of-line-blocks every
+    request behind it for its whole service time."""
+
+    def __init__(self, wid, cfg, cost, pool_bytes, block_size,
+                 chunk_tokens: int = 0):
         self.wid = wid
         self.cost = cost
+        self.chunk_tokens = chunk_tokens
         bpt = kv_bytes_per_token(cfg)
         n_blocks = max(64, int(pool_bytes / (bpt * block_size)))
         self.mgr = CacheManager(cfg, n_blocks, block_size)
         self.busy_until = 0.0
         self.queue = []
         self.busy_time = 0.0
+        self.inflight_pages = 0   # worst-case pages of in-service requests
 
     def service_time(self, n_new, kv_len):
         return self.cost.prefill(max(n_new, 1), kv_len).seconds
@@ -163,7 +176,8 @@ class Simulator:
         kv_budget = scfg.hbm_per_worker - model_cfg.param_count() * 2
         assert kv_budget > 0, "worker HBM cannot even hold the weights"
         self.prefill = [
-            _PrefillWorker(i, model_cfg, cost, kv_budget, scfg.block_size)
+            _PrefillWorker(i, model_cfg, cost, kv_budget, scfg.block_size,
+                           chunk_tokens=scfg.prefill_chunk_tokens)
             for i in range(scfg.n_prefill_workers)]
         self.decode = [
             _DecodeWorker(i, model_cfg, cost, scfg.hbm_per_worker,
@@ -250,24 +264,92 @@ class Simulator:
     def _kick_prefill(self, t, w: _PrefillWorker):
         if w.busy_until > t or not w.queue:
             return
-        st, inv, rec = w.queue.pop(0)
-        tokens = st.context
-        alloc = w.mgr.acquire(tokens)   # pool sized >= one max-context request
-        n_new = alloc.total_tokens - alloc.cached_tokens
-        rec.prefill_cached = alloc.cached_tokens
-        rec.prefill_new = n_new
-        dur = w.service_time(n_new, alloc.cached_tokens)
-        w.busy_until = t + dur
-        w.busy_time += dur
-        w.mgr.commit(tokens, alloc)
-        self._push(t + dur, "prefill_done", (w.wid, st, inv, rec, alloc))
+        # one pass over the queue: a request whose slice cannot obtain pages
+        # is HELD at the tail (its computed pages stay pinned) and retried
+        # when a later completion releases an allocation — the engine
+        # scheduler's backpressure, in event form
+        for _ in range(len(w.queue)):
+            item = w.queue.pop(0)
+            st, inv, rec = item[:3]
+            prog = item[3] if len(item) > 3 else None
+            if prog is None:             # first slice of this request
+                tokens = list(st.context)
+                if w.chunk_tokens:
+                    # worst-case admission control (the engine's promote
+                    # gate, prefill-side): start slicing a new prompt only
+                    # if its full page footprint fits alongside the prompts
+                    # already in service — round-robin then cannot pin the
+                    # pool dry mid-prefill, and tight pools degrade to the
+                    # serial service the unchunked mode models
+                    bs = w.mgr.pool.block_size
+                    need = -(-len(tokens) // bs)
+                    if (w.inflight_pages
+                            and w.inflight_pages + need > w.mgr.pool.num_blocks):
+                        w.queue.append((st, inv, rec))   # unstarted: unpinned
+                        continue
+                    # chunk-granular growth, mirroring the engine's
+                    # scheduler: only the prefix is claimed now; tail pages
+                    # arrive with each slice (extend below), so interleaved
+                    # long prompts hold computed pages, not whole-prompt
+                    # allocations
+                    alloc = w.mgr.begin(tokens)
+                    w.inflight_pages += need
+                else:
+                    need = 0
+                    alloc = w.mgr.acquire(tokens)  # pool >= one max-ctx req
+                    w.mgr.commit(tokens, alloc)
+                n_new = alloc.total_tokens - alloc.cached_tokens
+                rec.prefill_cached = alloc.cached_tokens
+                rec.prefill_new = n_new
+                prog = {"alloc": alloc, "tokens": tokens, "n_new": n_new,
+                        "done": 0, "pages": need}
+            alloc = prog["alloc"]
+            remaining = prog["n_new"] - prog["done"]
+            chunk = remaining if not w.chunk_tokens else min(w.chunk_tokens,
+                                                            remaining)
+            if w.chunk_tokens:
+                bs = w.mgr.pool.block_size
+                covered = alloc.cached_tokens + prog["done"] + chunk
+                try:
+                    w.mgr.extend(alloc,
+                                 -(-covered // bs) - len(alloc.blocks))
+                except PoolExhausted:
+                    w.queue.append((st, inv, rec, prog))
+                    continue
+            # chunk service cost accounts for the prefix ALREADY in the
+            # cache (cached hit + previously-computed chunks), mirroring the
+            # engine's chunk forward attending to the growing paged prefix.
+            dur = w.service_time(chunk, alloc.cached_tokens + prog["done"])
+            w.busy_until = t + dur
+            w.busy_time += dur
+            prog["done"] += chunk
+            self._push(t + dur, "prefill_chunk_done",
+                       (w.wid, st, inv, rec, prog))
+            return
+        # every queued request is stalled on pool pressure with the worker
+        # idle: no in-flight slice will ever release pages -> fail loudly
+        # (the engine scheduler raises in the same no-progress situation)
+        raise PoolExhausted(
+            f"sim prefill worker {w.wid}: {len(w.queue)} chunked requests "
+            f"hold partial allocations and none can grow")
 
-    def _on_prefill_done(self, t, payload):
-        wid, st, inv, rec, alloc = payload
+    def _on_prefill_chunk_done(self, t, payload):
+        wid, st, inv, rec, prog = payload
         w = self.prefill[wid]
+        if prog["done"] < prog["n_new"]:
+            # requeue at the TAIL: other waiting requests get their slice
+            # before this prompt's next chunk (no head-of-line blocking)
+            w.queue.append((st, inv, rec, prog))
+            self._kick_prefill(t, w)
+            return
+        if w.chunk_tokens:
+            # publish for prefix reuse only once fully computed (the
+            # engine's scheduler commits at promote time)
+            w.mgr.commit(prog["tokens"], prog["alloc"])
+            w.inflight_pages -= prog["pages"]
         # pages stay CACHED (LRU-evictable) for future prefix extension; the
         # decode side consumes its own handed-off copy, so no pin is needed.
-        w.mgr.release(alloc)
+        w.mgr.release(prog["alloc"])
         self._kick_prefill(t, w)
         self._try_handoff(t, st, inv, rec)
 
