@@ -1,6 +1,7 @@
-"""Batched paged decode vs the seed B=1 dense loop (acceptance benchmark).
+"""Batched paged decode vs the seed B=1 dense loop (acceptance benchmark),
+plus the fused cross-model decode plane vs the per-model dispatch loop.
 
-Same real models, same greedy outputs, two execution paths:
+Same real models, same greedy outputs, execution paths:
 
   dense-B1  — the seed engine's path: dense per-session prefill, full-cache
               ``transfer_cache`` handoff copy, then a Python B=1 decode loop
@@ -9,12 +10,18 @@ Same real models, same greedy outputs, two execution paths:
               handoff, then CONTINUOUS-BATCH decode (all sequences advance
               one token per jitted batched step over the shared page pool).
 
-Prints tokens/s for both and the speedup; also cross-checks that both paths
-emit identical greedy tokens. Expected: >= 2x at batch >= 4 (batching removes
-the per-token Python/dispatch overhead; on TPU the paged Pallas kernel also
-amortizes each K/V page fetch across the GQA group).
+``--models N > 1`` adds the multi-model workload: N task-specific decoders
+fan out over shared contexts, comparing
 
-Usage: PYTHONPATH=src python -m benchmarks.paged_decode_bench [--batch 4]
+  per-model — one jitted forward per decode model per step (fused=False),
+  fused     — stacked decoder params, ONE vmapped jitted forward per step
+              for every active sequence of every model (serving/decode.py),
+
+reporting dispatches/step and tokens/s for both, with greedy outputs
+asserted identical.
+
+Usage: PYTHONPATH=src python -m benchmarks.paged_decode_bench
+           [--batch 4] [--models 4]
 """
 from __future__ import annotations
 
@@ -81,11 +88,64 @@ def main(batch: int = 4, gen: int = 32, ctx_len: int = 48, seed: int = 0):
     return rows, speedup
 
 
+def multi_model(n_models: int = 4, seqs_per_model: int = 2, gen: int = 32,
+                ctx_len: int = 48, seed: int = 0):
+    """Agent fan-out workload: every session's context is decoded by several
+    task-specific models over ONE shared prefill. Reports dispatches/step and
+    tokens/s for the per-model loop vs the fused vmapped step."""
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    decs = {f"m{i}": init_params(CFG, jax.random.PRNGKey(7 + i))
+            for i in range(n_models)}
+    rng = np.random.default_rng(seed)
+    # ONE context per session, fanned out to every model (the paper's agent
+    # pattern): sibling submits reuse the session's pages, so the decode
+    # plane — not prefill — dominates the measured window.
+    ctxs = [list(rng.integers(4, 60, size=ctx_len + 2 * sid))
+            for sid in range(seqs_per_model)]
+    jobs = [(sid, ctxs[sid], f"m{i}")
+            for sid in range(seqs_per_model)
+            for i in range(n_models)]
+
+    def run(fused):
+        eng = LocalDisaggEngine(CFG, base, decs, num_pages=2048, fused=fused)
+        rids = [eng.submit(sid, ctx, mid, gen_tokens=gen)
+                for sid, ctx, mid in jobs]
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        outs = [eng.result(r) for r in rids]
+        return (outs, len(jobs) * gen / dt,
+                eng.stats.decode_dispatches / max(1, eng.stats.decode_steps),
+                eng)
+
+    loop_out, loop_tps, loop_dps, _ = run(fused=False)
+    fused_out, fused_tps, fused_dps, eng = run(fused=True)
+    for a, b in zip(fused_out, loop_out):
+        np.testing.assert_array_equal(a, b)
+    assert fused_dps == 1.0, f"fused plane issued {fused_dps} dispatches/step"
+
+    rows = [{"path": "per-model-loop", "models": n_models, "tok_s": loop_tps,
+             "dispatches_per_step": loop_dps},
+            {"path": "fused-vmapped", "models": n_models, "tok_s": fused_tps,
+             "dispatches_per_step": fused_dps}]
+    print("path,models,dispatches_per_step,tok_s")
+    for r in rows:
+        print(f"{r['path']},{r['models']},{r['dispatches_per_step']:.1f},"
+              f"{r['tok_s']:.1f}")
+    print(f"# fused speedup={fused_tps / loop_tps:.2f}x over per-model loop "
+          f"(greedy outputs identical, {n_models} models, "
+          f"{len(jobs)} sequences, traces={eng.decode_plane.traces})")
+    return rows, fused_tps / loop_tps
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--ctx", type=int, default=48)
+    ap.add_argument("--models", type=int, default=4)
     args = ap.parse_args()
     _, speedup = main(batch=args.batch, gen=args.gen, ctx_len=args.ctx)
     assert speedup >= 2.0, f"batched paged decode only {speedup:.2f}x"
+    if args.models > 1:
+        multi_model(n_models=args.models, gen=args.gen, ctx_len=args.ctx)

@@ -65,6 +65,34 @@ def lora_param_count(lora_params) -> int:
     return sum(x.size for x in jax.tree.leaves(lora_params))
 
 
+def stack_params(param_list):
+    """Stack structurally-identical param pytrees on a NEW leading model axis.
+
+    This is the fused decode plane's parameter layout: N task-specific decode
+    modules sharing one ModelConfig become one pytree whose every leaf is
+    (N, ...), so a single vmapped forward advances sequences of all N models
+    in one dispatch (serving.decode.StackedDecoders)."""
+    assert param_list, "need at least one param pytree to stack"
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *param_list)
+
+
+def stack_lora_params(lora_list):
+    """``stack_params`` for LoRA adapter pytrees (None where untargeted).
+
+    Memory-lean variant of the fused plane for adapter-only decoders: stack
+    just the (tiny) A/B factors and merge ``W + scale * A[m] @ B[m]`` inside
+    the vmapped step, instead of stacking N full materialized models."""
+    assert lora_list, "need at least one adapter pytree to stack"
+
+    def s(*xs):
+        if xs[0] is None:
+            assert all(x is None for x in xs), "adapter targets differ"
+            return None
+        return jnp.stack(xs)
+
+    return jax.tree.map(s, *lora_list, is_leaf=lambda x: x is None)
+
+
 def cache_conditioned_lora_loss(cfg, lora_params, base_params, prompt,
                                 target_in, target_out, target_mask, *,
                                 alpha: float = 16.0, rank: int = 8,

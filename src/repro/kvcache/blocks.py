@@ -5,6 +5,12 @@ physical pages hold KV produced by the *base* model, so the same page can be
 referenced by requests headed to different decode models. Pages move through
 states: FREE -> ACTIVE (refcount > 0) -> CACHED (refcount 0, retained for
 prefix reuse, LRU-evictable) -> FREE.
+
+Page id 0 is the PADDING SENTINEL: it is never allocated, so every ragged
+block table zero-padded to a common width (batched decode steps, chunked
+prefill, the fused multi-model plane's fake batch rows) aliases a page that
+holds no live KV by construction. Usable ids are 1..num_blocks; ``num_blocks``
+remains the usable capacity.
 """
 from __future__ import annotations
 
@@ -24,12 +30,15 @@ class PoolStats:
 
 
 class BlockPool:
+    #: page id reserved as the never-allocated block-table padding sentinel
+    SENTINEL = 0
+
     def __init__(self, num_blocks: int, block_size: int):
         assert num_blocks > 0 and block_size > 0
-        self.num_blocks = num_blocks
+        self.num_blocks = num_blocks          # usable capacity: ids 1..num_blocks
         self.block_size = block_size
-        self._free = list(range(num_blocks - 1, -1, -1))
-        self._refcount = [0] * num_blocks
+        self._free = list(range(num_blocks, 0, -1))
+        self._refcount = [0] * (num_blocks + 1)
         self._cached = OrderedDict()          # block_id -> None, LRU order
         self._evict_cbs = []                  # notify indexes on eviction
         self.stats = PoolStats()
@@ -74,6 +83,8 @@ class BlockPool:
     def ref(self, block_ids) -> None:
         """Take a reference on existing blocks (prefix-cache hit)."""
         for bid in block_ids:
+            if bid == self.SENTINEL:
+                raise ValueError("page 0 is the padding sentinel, never live")
             if self._refcount[bid] == 0:
                 if bid not in self._cached:
                     raise ValueError(f"block {bid} is free, cannot ref")
@@ -83,6 +94,8 @@ class BlockPool:
     def unref(self, block_ids) -> None:
         """Drop a reference; refcount-0 blocks become CACHED (LRU-retained)."""
         for bid in block_ids:
+            if bid == self.SENTINEL:
+                raise ValueError("page 0 is the padding sentinel, never live")
             rc = self._refcount[bid]
             if rc <= 0:
                 raise ValueError(f"block {bid} not active")
@@ -100,6 +113,8 @@ class BlockPool:
     def drop(self, block_ids) -> None:
         """Hard-free blocks (invalidated, e.g. schema mismatch)."""
         for bid in block_ids:
+            if bid == self.SENTINEL:
+                raise ValueError("page 0 is the padding sentinel, never live")
             if bid in self._cached:
                 del self._cached[bid]
             self._refcount[bid] = 0
@@ -113,7 +128,10 @@ class BlockPool:
         free = set(self._free)
         cached = set(self._cached)
         assert not (free & cached), "block both free and cached"
-        for bid in range(self.num_blocks):
+        assert self.SENTINEL not in free and self.SENTINEL not in cached, \
+            "sentinel page 0 entered the pool"
+        assert self._refcount[self.SENTINEL] == 0, "sentinel page 0 is live"
+        for bid in range(1, self.num_blocks + 1):
             rc = self._refcount[bid]
             if bid in free:
                 assert rc == 0, f"free block {bid} has refcount {rc}"

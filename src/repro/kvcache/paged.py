@@ -20,6 +20,18 @@ Data flow:
     the paged decode-attention step (Pallas kernel on TPU, jnp gather twin
     elsewhere) and appends each generated token's KV to the sequence's
     private tail page; ``absorb_decode_cache`` publishes the updated pages.
+
+Donation-aware decode state: ``decode_state()`` hands the page buffers out as
+one pytree to be passed INTO a jitted decode step (donated on TPU, so XLA
+updates the touched pages in place instead of functionally copying the pool
+per step — mirroring ``copy_page``), and ``absorb_decode_state`` stores the
+step's returned buffers back. Off-TPU donation is a no-op and the pair
+degrades to the plain functional update.
+
+Physical row 0 is the padding sentinel (``BlockPool.SENTINEL``): it is never
+allocated, so ragged block tables zero-padded to a common width can never
+alias live KV. The pool therefore carries ``num_pages + 1`` physical rows for
+``num_pages`` usable pages (ids 1..num_pages).
 """
 from __future__ import annotations
 
@@ -68,7 +80,7 @@ class PagedKVPool:
             f"paged KV plane requires a pure global-attention decoder "
             f"(got pattern {cfg.layer_pattern}, encdec={cfg.is_encdec})")
         self.cfg = cfg
-        self.num_pages = num_pages
+        self.num_pages = num_pages            # usable pages (ids 1..num_pages)
         self.page_size = page_size
         self.hkv, self.hd = cfg.n_kv_heads, cfg.head_dim
         dt = jnp.dtype(dtype or cfg.dtype)
@@ -76,7 +88,8 @@ class PagedKVPool:
         self.n_full = cfg.n_layers // len(pat)
         n_tail = cfg.n_layers % len(pat)
 
-        shape = (num_pages, page_size, self.hkv, self.hd)
+        # +1 physical row: row 0 is the never-allocated padding sentinel
+        shape = (num_pages + 1, page_size, self.hkv, self.hd)
         self.k_groups = {f"pos{i}": jnp.zeros((self.n_full,) + shape, dt)
                          for i in range(len(pat))} if self.n_full else {}
         self.v_groups = {g: jnp.zeros_like(a) for g, a in self.k_groups.items()}
@@ -143,16 +156,23 @@ class PagedKVPool:
                 leaf_k.shape[:-3] + (span, self.hkv, self.hd))
 
         for g in self.k_groups:
+            # ONE kernel launch per group: the stacked (n_full, P, page, H, D)
+            # layer axis folds into paged_write's batch axis by flattening the
+            # pool to (n_full * P, ...) and offsetting each layer's block
+            # table by its pool stride — no per-layer Python loop, and no
+            # per-prefill ``jnp.stack`` rebuild of the group array.
             kc, vc = rows(cache["groups"][g]["k"]), rows(cache["groups"][g]["v"])
-            ks, vs = [], []
-            for li in range(self.n_full):
-                kp, vp = paged_write(kc[li][None], vc[li][None],
-                                     self.k_groups[g][li], self.v_groups[g][li],
-                                     bt_tail, nvalid, interpret=interp)
-                ks.append(kp)
-                vs.append(vp)
-            self.k_groups[g] = jnp.stack(ks)
-            self.v_groups[g] = jnp.stack(vs)
+            kg, vg = self.k_groups[g], self.v_groups[g]
+            P = kg.shape[1]
+            off = (jnp.arange(self.n_full, dtype=jnp.int32) * P)[:, None]
+            bt_l = bt_tail[0][None] + off                     # (n_full, npages)
+            nv_l = jnp.broadcast_to(nvalid, (self.n_full,))
+            kp, vp = paged_write(kc, vc,
+                                 kg.reshape((self.n_full * P,) + kg.shape[2:]),
+                                 vg.reshape((self.n_full * P,) + vg.shape[2:]),
+                                 bt_l, nv_l, interpret=interp)
+            self.k_groups[g] = kp.reshape(kg.shape)
+            self.v_groups[g] = vp.reshape(vg.shape)
         for i in range(len(self.k_tail)):
             kc, vc = rows(cache["tail"][i]["k"]), rows(cache["tail"][i]["v"])
             self.k_tail[i], self.v_tail[i] = paged_write(
@@ -174,17 +194,46 @@ class PagedKVPool:
         self.k_groups, self.v_groups = new["kg"], new["vg"]
         self.k_tail, self.v_tail = list(new["kt"]), list(new["vt"])
 
-    def make_decode_cache(self, block_tables):
+    def decode_state(self):
+        """The pool's page buffers as ONE pytree, to be passed INTO a jitted
+        decode step as an argument (donate it on TPU: pages then update in
+        place instead of the per-step functional pool copy). Pair with
+        ``absorb_decode_state`` on the step's return value."""
+        return {"groups": {g: {"k": self.k_groups[g], "v": self.v_groups[g]}
+                           for g in self.k_groups},
+                "tail": [{"k": k, "v": v}
+                         for k, v in zip(self.k_tail, self.v_tail)]}
+
+    def absorb_decode_state(self, state) -> None:
+        """Store the page buffers a jitted decode step returned. After a
+        donated TPU step the previous buffers are invalid; off-TPU donation
+        is a no-op and this is a plain functional publish."""
+        for g in self.k_groups:
+            self.k_groups[g] = state["groups"][g]["k"]
+            self.v_groups[g] = state["groups"][g]["v"]
+        for i in range(len(self.k_tail)):
+            self.k_tail[i] = state["tail"][i]["k"]
+            self.v_tail[i] = state["tail"][i]["v"]
+
+    @staticmethod
+    def wire_decode_cache(state, block_tables, n_full: int):
+        """Wire a ``decode_state`` pytree + per-sequence block tables into a
+        model cache pytree (traceable: usable inside a jitted/vmapped step)."""
+        bt = jnp.asarray(block_tables, jnp.int32)
+        groups = {g: {"k_pages": st["k"], "v_pages": st["v"],
+                      "block_tables": jnp.broadcast_to(
+                          bt, (n_full,) + bt.shape)}
+                  for g, st in state["groups"].items()}
+        tail = [{"k_pages": st["k"], "v_pages": st["v"], "block_tables": bt}
+                for st in state["tail"]]
+        return {"groups": groups, "tail": tail}
+
+    def make_decode_cache(self, block_tables, state=None):
         """Wire the pool + per-sequence block tables into a model cache
         pytree for a batched decode step (see attention.attn_apply)."""
-        bt = jnp.asarray(block_tables, jnp.int32)
-        groups = {g: {"k_pages": self.k_groups[g], "v_pages": self.v_groups[g],
-                      "block_tables": jnp.broadcast_to(
-                          bt, (self.n_full,) + bt.shape)}
-                  for g in self.k_groups}
-        tail = [{"k_pages": self.k_tail[i], "v_pages": self.v_tail[i],
-                 "block_tables": bt} for i in range(len(self.k_tail))]
-        return {"groups": groups, "tail": tail}
+        return self.wire_decode_cache(
+            self.decode_state() if state is None else state,
+            block_tables, self.n_full)
 
     def absorb_decode_cache(self, new_cache):
         """Publish the page arrays a decode step returned (functional update:

@@ -1,3 +1,4 @@
 from repro.serving.costmodel import CostModel
+from repro.serving.decode import FusedDecodePlane, StackedDecoders
 from repro.serving.simulator import ServingConfig, Simulator
 from repro.serving.workload import PATTERNS, Session, make_sessions

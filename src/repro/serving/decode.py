@@ -1,0 +1,181 @@
+"""Fused cross-model decode plane: stacked decoders, ONE vmapped step.
+
+The paper's decode pool hosts many task-specific modules over one shared
+prefill KV pool — but a per-model dispatch loop pays one jitted forward (and
+one retrace key) per decode model per engine step. Since every decode module
+sharing a ``ModelConfig`` is structurally identical (full fine-tunes and
+LoRA merges alike), their param pytrees stack on a leading model axis
+(``core.lora.stack_params``), and one ``vmap`` over that axis advances EVERY
+active sequence of EVERY model in a single jitted forward per step.
+
+Layout per step (``StackedDecoders.step``):
+  - sequences are bucketed per model into an (M, Bmax) grid, padded with fake
+    rows whose block tables point at the sentinel page 0 (never allocated, so
+    their garbage writes cannot alias live KV) — M stays constant across the
+    run (a model with zero active sequences keeps its lane), so lane count
+    never contributes retraces;
+  - block-table width is bucketed to the next power of two, so jit retraces
+    stop scaling with prompt length (growth by one page within a bucket
+    reuses the trace);
+  - the pool's page buffers enter the jitted step as ONE donated-on-TPU
+    pytree (``PagedKVPool.decode_state``), so pages update in place instead
+    of the per-step functional pool copy;
+  - inside the step, each model lane runs the unchanged paged decode forward
+    over a lane-local view of the pool; the ONE fresh KV row each real
+    sequence wrote is gathered back out of its lane and scattered into the
+    shared pool — bit-exact, because pages are private per sequence (the
+    lane-local copies are dead after the gather and fuse away).
+
+Greedy outputs are asserted identical to the per-model loop
+(tests/test_fused_decode.py); the per-model path remains available as
+``LocalDisaggEngine(fused=False)`` for comparison.
+
+On TPU the vmapped lanes lower the paged-attention Pallas kernel through its
+batching rule; off-TPU the pure-jnp gather twin vmaps natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lora import stack_params
+from repro.models import forward
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1): the block-table width bucket."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def group_by_config(decoders):
+    """Partition ``{model_id: (cfg, params)}`` into fusable groups: models
+    sharing an identical ModelConfig stack into one StackedDecoders lane set;
+    each distinct config costs one dispatch per step."""
+    groups: dict = {}
+    for mid, (cfg, params) in decoders.items():
+        groups.setdefault(cfg, {})[mid] = params
+    return groups
+
+
+class StackedDecoders:
+    """All decode modules of ONE ModelConfig, stacked for the fused step."""
+
+    def __init__(self, cfg, decoders: dict, kvpool):
+        assert decoders, "need at least one decode module"
+        self.cfg = cfg
+        self.kvpool = kvpool
+        self.page_size = kvpool.page_size
+        self.model_ids = sorted(decoders)            # stable model-axis order
+        self.index = {mid: m for m, mid in enumerate(self.model_ids)}
+        self.stacked = stack_params([decoders[mid] for mid in self.model_ids])
+        self.traces = 0                              # jit retraces (tests)
+        self.dispatches = 0                          # jitted-step invocations
+        self._step = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        cfg, n_full, page = self.cfg, self.kvpool.n_full, self.page_size
+        wire = self.kvpool.wire_decode_cache
+
+        def fused(stacked, state, toks, pos, bts, seq_m, seq_b):
+            # Python body runs once per trace: count retraces here.
+            self.traces += 1
+
+            def lane(params, t, p, bt):
+                cache = wire(state, bt, n_full)      # state: shared, unbatched
+                logits, new_cache, _ = forward(cfg, params, t[:, None],
+                                               cache=cache, pos=p)
+                return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+            nxt, caches = jax.vmap(lane)(stacked, toks, pos, bts)
+            # Each real sequence wrote exactly ONE row, at (page, slot) named
+            # by its own block table — gather those rows out of the lane-local
+            # pool copies and scatter them into the shared state. Pages are
+            # private per sequence (sentinel page 0 absorbs fake-row writes),
+            # so indices never collide and the merge is bit-exact.
+            pg_all = jnp.take_along_axis(bts, (pos // page)[..., None],
+                                         axis=2)[..., 0]            # (M, Bmax)
+            pg = pg_all[seq_m, seq_b]
+            slot = (pos % page)[seq_m, seq_b]                       # (N,)
+            new_groups = {}
+            for g, st in state["groups"].items():
+                ko = caches["groups"][g]["k_pages"]  # (M, n_full, P, pg, H, D)
+                vo = caches["groups"][g]["v_pages"]
+                rk = jnp.moveaxis(ko[seq_m, :, pg, slot], 0, 1)  # (n_full,N,H,D)
+                rv = jnp.moveaxis(vo[seq_m, :, pg, slot], 0, 1)
+                new_groups[g] = {"k": st["k"].at[:, pg, slot].set(rk),
+                                 "v": st["v"].at[:, pg, slot].set(rv)}
+            new_tail = []
+            for i, st in enumerate(state["tail"]):
+                ko = caches["tail"][i]["k_pages"]    # (M, P, page, H, D)
+                vo = caches["tail"][i]["v_pages"]
+                new_tail.append(
+                    {"k": st["k"].at[pg, slot].set(ko[seq_m, pg, slot]),
+                     "v": st["v"].at[pg, slot].set(vo[seq_m, pg, slot])})
+            return (nxt[seq_m, seq_b],
+                    {"groups": new_groups, "tail": new_tail})
+
+        # donate the pool buffers (arg 1) where donation is honoured, so the
+        # fused step appends KV in place — mirrors kvcache.paged.copy_page
+        donate = (1,) if jax.default_backend() == "tpu" else ()
+        return jax.jit(fused, donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+    def step(self, seqs) -> np.ndarray:
+        """Advance every sequence (any mix of this group's models) one greedy
+        token in ONE jitted forward; returns next tokens aligned with
+        ``seqs``. Tail pages must already cover position ``pos``."""
+        M, page = len(self.model_ids), self.page_size
+        counts = [0] * M
+        coords = []
+        for s in seqs:
+            m = self.index[s.model_id]
+            coords.append((m, counts[m]))
+            counts[m] += 1
+        bmax = max(counts)
+        npages = next_pow2(max(len(s.block_table) for s in seqs))
+        toks = np.zeros((M, bmax), np.int32)
+        pos = np.zeros((M, bmax), np.int32)
+        bts = np.zeros((M, bmax, npages), np.int32)   # pad = sentinel page 0
+        for s, (m, b) in zip(seqs, coords):
+            toks[m, b] = s.next_token
+            pos[m, b] = s.pos
+            bts[m, b, :len(s.block_table)] = s.block_table
+        seq_m = jnp.asarray([m for m, _ in coords], jnp.int32)
+        seq_b = jnp.asarray([b for _, b in coords], jnp.int32)
+        nxt, new_state = self._step(self.stacked, self.kvpool.decode_state(),
+                                    jnp.asarray(toks), jnp.asarray(pos),
+                                    jnp.asarray(bts), seq_m, seq_b)
+        self.kvpool.absorb_decode_state(new_state)
+        self.dispatches += 1
+        return np.asarray(nxt)
+
+
+class FusedDecodePlane:
+    """Routes sequences to their config group's StackedDecoders: one jitted
+    dispatch per engine step per distinct decode ModelConfig (ONE total when
+    every decode module shares the engine's config — the paper's setting)."""
+
+    def __init__(self, decoders, kvpool):
+        """decoders: {model_id: (cfg, params)}."""
+        self.groups = [StackedDecoders(cfg, members, kvpool)
+                       for cfg, members in group_by_config(decoders).items()]
+        self._group_of = {mid: g for g in self.groups for mid in g.model_ids}
+
+    @property
+    def traces(self) -> int:
+        return sum(g.traces for g in self.groups)
+
+    @property
+    def dispatches(self) -> int:
+        return sum(g.dispatches for g in self.groups)
+
+    def step(self, seqs) -> np.ndarray:
+        """One engine decode step; returns next tokens aligned with seqs."""
+        nxt = np.zeros(len(seqs), np.int32)
+        for g in self.groups:
+            idx = [i for i, s in enumerate(seqs) if self._group_of[s.model_id] is g]
+            if idx:
+                nxt[idx] = g.step([seqs[i] for i in idx])
+        return nxt

@@ -26,12 +26,15 @@ Data plane (pure global-attention archs, the paper's operating point):
     takes a refcount on every page; a partially-filled tail page is cloned
     first (page-level copy-on-write) so concurrent decoders can append
     privately. ``handoff_bytes`` counts only the block-table metadata.
-  - decode: all active sequences (across sessions and decode models sharing
-    this config) advance one token per engine step; sequences of the same
-    decode model run as ONE batched forward using the paged decode-attention
-    step (Pallas kernel on TPU, jnp gather twin elsewhere), with generated KV
-    appended to freshly allocated private pages. Pages are freed only when
-    the last holder (prefill session or decode sequence) releases them.
+  - decode: all active sequences (across sessions AND decode models sharing
+    this config) advance one token per engine step in ONE fused, jitted,
+    vmapped forward over model-stacked decoder params (serving/decode.py;
+    ``fused=False`` restores the per-model dispatch loop), using the paged
+    decode-attention step (Pallas kernel on TPU, jnp gather twin elsewhere),
+    with generated KV appended to freshly allocated private pages. The pool's
+    page buffers are donated into the jitted step on TPU so pages update in
+    place. Pages are freed only when the last holder (prefill session or
+    decode sequence) releases them.
 
 Archs with non-KV sequence state (SSM/recurrent/hybrid/enc-dec) fall back to
 the dense per-session path (``paged=False``), preserving the state-handoff
@@ -60,6 +63,7 @@ from repro.kvcache.manager import CacheManager
 from repro.kvcache.paged import PagedKVPool
 from repro.models import forward
 from repro.serving.backpressure import ThroughputEWMA
+from repro.serving.decode import FusedDecodePlane
 from repro.serving.router import PrefillRouter
 from repro.serving.scheduler import (ChunkedScheduler, Request,
                                      SchedulerConfig)
@@ -107,6 +111,7 @@ class EngineStats:
     cow_page_copies: int = 0
     decode_steps: int = 0
     decode_tokens: int = 0
+    decode_dispatches: int = 0    # jitted decode forwards issued
 
     @property
     def hit_ratio(self):
@@ -138,6 +143,7 @@ class PrefillWorker:
         self.sessions: dict[int, PagedSession] = {}
         self.stats = stats
         self.backlog_s = 0.0      # router load signal (estimated work issued)
+        self.last_decay_t = time.monotonic()   # backlog decay clock
         self.ewma = ThroughputEWMA()       # measured prefill s/token
         self.pending_chunk_tokens = 0      # admitted-but-uncomputed (chunked)
 
@@ -197,6 +203,7 @@ class DensePrefillWorker:
         self.mgr = CacheManager(cfg, mgr_blocks, block_size)
         self.stats = stats if stats is not None else EngineStats()
         self.backlog_s = 0.0
+        self.last_decay_t = time.monotonic()
         self.ewma = ThroughputEWMA()
         self.pending_chunk_tokens = 0
 
@@ -271,8 +278,12 @@ class DecodeWorker:
                 return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
 
             # jit keyed on (B, npages) shapes; retraces only when the batch
-            # composition or table width changes.
-            self._step = jax.jit(_step)
+            # composition or table width changes. The cache (pool pages +
+            # block tables) is donated where donation is honoured, so the
+            # step appends KV in place; make_decode_cache/absorb_decode_cache
+            # are the donation-aware pair around this call.
+            donate = (3,) if jax.default_backend() == "tpu" else ()
+            self._step = jax.jit(_step, donate_argnums=donate)
         return self._step(self.dec_params, tokens, pos, cache)
 
     # ---- dense fallback ----
@@ -304,7 +315,8 @@ class LocalDisaggEngine:
                  num_pages: int = 1024, page_size: int = 16,
                  n_prefill_workers: int = 1, router_policy: str = "pinned",
                  chunked: bool = False, token_budget: int = 256,
-                 chunk_size: int = 64, sched_policy: str = "fcfs"):
+                 chunk_size: int = 64, sched_policy: str = "fcfs",
+                 fused: bool | None = None):
         self.cfg = cfg
         self.base_params = base_params
         self.page_size = page_size
@@ -334,28 +346,52 @@ class LocalDisaggEngine:
         self.decoders = {
             mid: DecodeWorker(cfg, mid, params, self.schema)
             for mid, params in decoders.items()}
+        # fused cross-model decode (serving.decode): stack the decoder param
+        # pytrees and advance every sequence of every model in ONE vmapped,
+        # jitted forward per step. Default on the paged plane; fused=False
+        # keeps the per-model dispatch loop (comparison/regression path).
+        self.fused = self.paged if fused is None else fused
+        assert not (self.fused and not self.paged), \
+            "fused decode requires the paged data plane"
+        self.decode_plane = FusedDecodePlane(
+            {mid: (cfg, params) for mid, params in decoders.items()},
+            self.kvpool) if self.fused else None
         self.scheduler = ChunkedScheduler(
             self, SchedulerConfig(token_budget=token_budget,
                                   chunk_size=chunk_size,
                                   policy=sched_policy))
         self._results: dict[int, np.ndarray] = {}
+        self._fetched: set[int] = set()
         self._next_rid = 0
         self._next_seq = 0
 
+    #: half-life of the issued-work router signal, in seconds of WALL TIME.
+    #: Decay must be a function of elapsed time, not of pick count — a
+    #: per-pick multiplicative decay makes the load signal depend on arrival
+    #: rate (two bursts a second apart would see completely different
+    #: backlogs), which tests/test_router.py pins as a regression.
+    BACKLOG_HALFLIFE_S = 0.25
+
     # ------------------------------------------------------------------
-    def _pick_worker(self, sid: int):
+    def _pick_worker(self, sid: int, now: float | None = None):
         # Prefill here is synchronous, so there is no literal queue; the
         # routing signal is recency-weighted issued work plus (in chunked
         # mode) the admitted-but-uncomputed chunk backlog, both priced at
-        # the worker's MEASURED s/token EWMA. Decaying the issued-work term
-        # each pick keeps least_loaded balancing while preventing spillover
-        # from permanently migrating pinned sessions off an idle worker
-        # just because its lifetime total is ahead.
+        # the worker's MEASURED s/token EWMA. The issued-work term decays
+        # exponentially in ELAPSED TIME (half-life above), which keeps
+        # least_loaded balancing while preventing spillover from permanently
+        # migrating pinned sessions off an idle worker just because its
+        # lifetime total is ahead — and, unlike the old per-pick halving,
+        # makes the signal invariant to how often the router is consulted.
+        now = time.monotonic() if now is None else now
         for w in self.prefill_workers:
-            w.backlog_s *= 0.5
+            dt = now - w.last_decay_t
+            if dt > 0:
+                w.backlog_s *= 0.5 ** (dt / self.BACKLOG_HALFLIFE_S)
+                w.last_decay_t = now
         backlogs = [w.backlog_s + w.ewma.backlog_seconds(w.pending_chunk_tokens)
                     for w in self.prefill_workers]
-        return self.prefill_workers[self.router.pick(sid, 0.0, backlogs)]
+        return self.prefill_workers[self.router.pick(sid, now, backlogs)]
 
     def _handoff_seq(self, block_table, n: int, sid: int, model_id: str,
                      gen_tokens: int, first_token: int, rid: int) -> DecodeSeq:
@@ -427,13 +463,46 @@ class LocalDisaggEngine:
         """One scheduler step (benchmarks/tests interleave arrivals)."""
         self.scheduler.step()
 
-    def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> None:
+    def _grow_tail_pages(self, seqs: list[DecodeSeq]) -> None:
         page = self.page_size
         for s in seqs:                       # grow private tail pages
             if s.pos >= len(s.block_table) * page:
                 [fresh] = self.block_pool.alloc(1)
                 s.block_table.append(fresh)
                 s.private_blocks.append(fresh)
+
+    def decode_step(self, seqs: list[DecodeSeq]) -> None:
+        """Advance every active sequence — across ALL decode models — one
+        greedy token. Fused mode (default): ONE jitted vmapped forward per
+        step per distinct decode config (one total here, every decoder shares
+        the engine config). fused=False: the per-model dispatch loop."""
+        if not seqs:
+            return
+        self._grow_tail_pages(seqs)
+        if self.decode_plane is not None:
+            before = self.decode_plane.dispatches
+            nxt = self.decode_plane.step(seqs)
+            self.stats.decode_dispatches += self.decode_plane.dispatches - before
+            for i, s in enumerate(seqs):
+                s.out.append(int(nxt[i]))
+                s.next_token = int(nxt[i])
+                s.pos += 1
+                s.remaining -= 1
+        else:
+            by_model: dict[str, list] = {}
+            for s in seqs:
+                by_model.setdefault(s.model_id, []).append(s)
+            for mid, group in by_model.items():
+                self._batched_step(mid, group)
+        # one ENGINE step regardless of mode, so decode_steps (and
+        # decode_batch_mean) mean the same thing fused and legacy
+        self.stats.decode_steps += 1
+        self.stats.decode_tokens += len(seqs)
+
+    def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> None:
+        """One per-model jitted forward (legacy fused=False dispatch unit).
+        ``decode_step`` owns step/token accounting and has already grown the
+        tail pages for the whole batch."""
         npages = max(len(s.block_table) for s in seqs)
         bt = np.zeros((len(seqs), npages), np.int32)
         for i, s in enumerate(seqs):
@@ -449,8 +518,7 @@ class LocalDisaggEngine:
             s.next_token = int(nxt[i])
             s.pos += 1
             s.remaining -= 1
-        self.stats.decode_steps += 1
-        self.stats.decode_tokens += len(seqs)
+        self.stats.decode_dispatches += 1
 
     def _finish(self, s: DecodeSeq) -> None:
         self._results[s.rid] = np.asarray(s.out, np.int32)
@@ -469,9 +537,36 @@ class LocalDisaggEngine:
         rid = self.submit(sid, context_tokens, model_id, gen_tokens,
                           first_token)
         self.run()
-        return self._results.pop(rid)
+        return self.pop_result(rid)
+
+    def _check_rid(self, rid: int) -> None:
+        if rid in self._results:
+            return
+        if rid in self._fetched:
+            raise KeyError(
+                f"request {rid}: result was already fetched via pop_result()")
+        if 0 <= rid < self._next_rid:
+            raise KeyError(
+                f"request {rid}: submitted but not finished — still waiting, "
+                f"prefilling, or decoding; drive the engine with run()/step()")
+        raise KeyError(
+            f"request {rid}: unknown request id (ids 0..{self._next_rid - 1} "
+            f"have been issued)")
 
     def result(self, rid: int) -> np.ndarray:
+        """Return the finished output for ``rid`` WITHOUT consuming it —
+        repeated calls return the same array; the entry is retained until an
+        explicit ``pop_result``. Raises a KeyError naming the rid and its
+        fetch state (pending / already-popped / unknown) instead of a bare
+        lookup failure."""
+        self._check_rid(rid)
+        return self._results[rid]
+
+    def pop_result(self, rid: int) -> np.ndarray:
+        """Fetch and release the finished output for ``rid`` (frees the
+        engine-side copy; a second pop raises a descriptive KeyError)."""
+        self._check_rid(rid)
+        self._fetched.add(rid)
         return self._results.pop(rid)
 
     def _invoke_dense(self, sid, context_tokens, model_id, gen_tokens,

@@ -300,6 +300,10 @@ class ChunkedScheduler:
 
     # ---- decode --------------------------------------------------------
     def _decode_phase(self) -> int:
+        """Advance every active sequence one token. Model grouping is the
+        ENGINE's concern now: the fused decode plane batches all models
+        sharing a config into one vmapped forward (engine.decode_step), so
+        the scheduler no longer splits the batch by model."""
         eng = self.engine
         still = []
         finished = 0
@@ -312,9 +316,5 @@ class ChunkedScheduler:
         self.active = still
         if not self.active:
             return finished
-        by_model: dict[str, list] = {}
-        for s in self.active:
-            by_model.setdefault(s.model_id, []).append(s)
-        for mid, seqs in by_model.items():
-            eng._batched_step(mid, seqs)
+        eng.decode_step(self.active)
         return finished + len(self.active)

@@ -7,7 +7,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.lora import (cache_conditioned_lora_loss, lora_apply,
-                             lora_init, lora_param_count)
+                             lora_init, lora_param_count, stack_lora_params,
+                             stack_params)
 from repro.models import init_params
 from repro.training import data as D
 from repro.training.optim import AdamW, apply_updates
@@ -28,6 +29,38 @@ def test_lora_init_targets_and_identity():
     merged = lora_apply(base, lora, rank=4)
     for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(merged)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stack_params_model_axis():
+    """The fused decode plane's layout: N structurally-identical pytrees
+    stack leaf-wise on a NEW leading model axis, and slicing lane m back out
+    recovers model m's params bit-for-bit."""
+    ps = [init_params(CFG, jax.random.PRNGKey(s)) for s in range(3)]
+    stacked = stack_params(ps)
+    for leaf, l0 in zip(jax.tree.leaves(stacked), jax.tree.leaves(ps[0])):
+        assert leaf.shape == (3,) + l0.shape
+    for m, p in enumerate(ps):
+        for leaf, orig in zip(jax.tree.leaves(stacked), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(np.asarray(leaf[m]), np.asarray(orig))
+
+
+def test_stack_lora_params_preserves_none_and_merge():
+    """Adapter stacking keeps untargeted leaves None, and a stacked slice
+    merges exactly like the per-model adapter it came from."""
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    loras = [lora_init(jax.random.PRNGKey(10 + s), base, rank=4)
+             for s in range(2)]
+    stacked = stack_lora_params(loras)
+    flat_s = jax.tree.leaves(stacked, is_leaf=lambda x: x is None)
+    flat_0 = jax.tree.leaves(loras[0], is_leaf=lambda x: x is None)
+    assert [x is None for x in flat_s] == [x is None for x in flat_0]
+    for m in range(2):
+        sl = jax.tree.map(lambda x: None if x is None else x[m], stacked,
+                          is_leaf=lambda x: x is None)
+        a = lora_apply(base, sl, rank=4)
+        b = lora_apply(base, loras[m], rank=4)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 def test_lora_grads_only_adapters():

@@ -101,7 +101,7 @@ def test_partial_prefill_writes_only_tail_pages():
     assert fresh.isdisjoint(bt1[:2])
     for g, a in eng.kvpool.k_groups.items():
         now = np.asarray(a)
-        for p in range(eng.block_pool.num_blocks):
+        for p in range(1, eng.block_pool.num_blocks + 1):   # usable page ids
             same = np.array_equal(now[:, p], snap_k[g][:, p])
             if p in fresh:
                 assert not same, f"tail page {p} not written"

@@ -1,5 +1,11 @@
 """Routing policies: locality vs load (paper §3.3 'whenever possible')."""
+import jax
+import numpy as np
+
 from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.serving.engine import LocalDisaggEngine
 from repro.serving.router import POLICIES, PrefillRouter
 from repro.serving.simulator import ServingConfig, Simulator
 from repro.serving.workload import make_sessions
@@ -23,6 +29,49 @@ def test_unit_pick():
     r = PrefillRouter(4, "spillover", spill_threshold_s=0.5)
     assert r.pick(5, 0.0, [0, 0.2, 0, 0]) == 1       # below threshold: home
     assert r.pick(5, 0.0, [0, 9.0, 0, 0]) == 0       # overloaded: spill
+
+
+def test_backlog_decay_is_invariant_to_pick_frequency():
+    """Regression: the issued-work router signal decays with ELAPSED TIME,
+    not with how often the router is consulted. The old per-pick halving made
+    two bursts a second apart see completely different backlogs depending on
+    arrival rate."""
+    cfg = ModelConfig(name="router-eng", arch_type="dense", n_layers=1,
+                      d_model=16, n_heads=2, n_kv_heads=1, d_ff=32,
+                      vocab_size=32, dtype="float32")
+    base = init_params(cfg, jax.random.PRNGKey(0))
+    eng = LocalDisaggEngine(cfg, base, {}, num_pages=16, page_size=8,
+                            n_prefill_workers=2, router_policy="least_loaded")
+    w0, w1 = eng.prefill_workers
+    t0 = 100.0
+    for w in (w0, w1):
+        w.last_decay_t = t0
+    w0.backlog_s, w1.backlog_s = 0.8, 0.2
+
+    # a burst of picks at ONE instant must not move the signal at all
+    for _ in range(50):
+        eng._pick_worker(7, now=t0)
+    assert (w0.backlog_s, w1.backlog_s) == (0.8, 0.2)
+
+    # advancing the clock decays by 2^(-dt/half_life), regardless of whether
+    # the router was consulted once or fifty times in between
+    hl = eng.BACKLOG_HALFLIFE_S
+    eng._pick_worker(7, now=t0 + hl)
+    np.testing.assert_allclose((w0.backlog_s, w1.backlog_s), (0.4, 0.1))
+    sparse = w0.backlog_s
+
+    eng2 = LocalDisaggEngine(cfg, base, {}, num_pages=16, page_size=8,
+                             n_prefill_workers=2,
+                             router_policy="least_loaded")
+    eng2.prefill_workers[0].backlog_s = 0.8
+    eng2.prefill_workers[1].backlog_s = 0.2
+    for w in eng2.prefill_workers:
+        w.last_decay_t = t0
+    for k in range(1, 51):                      # 50x higher pick rate
+        eng2._pick_worker(7, now=t0 + hl * k / 50)
+    np.testing.assert_allclose(eng2.prefill_workers[0].backlog_s, sparse)
+    # and least_loaded still ranks the workers the same way
+    assert eng2._pick_worker(7, now=t0 + hl) is eng2.prefill_workers[1]
 
 
 def test_policies_complete_and_locality_orders_hit_ratio():
