@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import init_params
+from repro.serving.api import SamplingParams
 from repro.serving.engine import LocalDisaggEngine
 
 CFG = ModelConfig(name="bench", arch_type="dense", n_layers=3, d_model=64,
@@ -51,12 +52,12 @@ def main(batch: int = 4, gen: int = 32, ctx_len: int = 48, seed: int = 0):
 
     # --- paged continuous batching -----------------------------------
     eng = LocalDisaggEngine(CFG, base, decs, num_pages=2048)
-    rids = [eng.submit(sid, c, "m0", gen_tokens=gen)
+    outs = [eng.generate("m0", c, SamplingParams(max_tokens=gen), session=sid)
             for sid, c in enumerate(ctxs)]
     t0 = time.perf_counter()
     eng.run()
     t_paged = time.perf_counter() - t0
-    paged_out = [eng.result(r) for r in rids]
+    paged_out = [o.result() for o in outs]
     paged_tps = batch * gen / t_paged
 
     # --- seed path: dense handoff copy + B=1 loop --------------------
@@ -68,8 +69,9 @@ def main(batch: int = 4, gen: int = 32, ctx_len: int = 48, seed: int = 0):
         from repro.kvcache.handoff import transfer_cache
         cache = transfer_cache(sc.cache)
         t0 = time.perf_counter()
-        dense_out.append(dense.decoders["m0"].generate(
-            cache, sc.n_tokens, 2, gen))
+        toks, _ = dense.decoders["m0"].generate(
+            cache, sc.n_tokens, 2, SamplingParams(max_tokens=gen))
+        dense_out.append(toks)
         t_dense += time.perf_counter() - t0
     dense_tps = batch * gen / t_dense
 
@@ -108,12 +110,13 @@ def multi_model(n_models: int = 4, seqs_per_model: int = 2, gen: int = 32,
 
     def run(fused):
         eng = LocalDisaggEngine(CFG, base, decs, num_pages=2048, fused=fused)
-        rids = [eng.submit(sid, ctx, mid, gen_tokens=gen)
-                for sid, ctx, mid in jobs]
+        ros = [eng.generate(mid, ctx, SamplingParams(max_tokens=gen),
+                            session=sid)
+               for sid, ctx, mid in jobs]
         t0 = time.perf_counter()
         eng.run()
         dt = time.perf_counter() - t0
-        outs = [eng.result(r) for r in rids]
+        outs = [o.result() for o in ros]
         return (outs, len(jobs) * gen / dt,
                 eng.stats.decode_dispatches / max(1, eng.stats.decode_steps),
                 eng)

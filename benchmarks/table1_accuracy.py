@@ -14,7 +14,6 @@ import sys
 sys.path.insert(0, "src")
 
 from benchmarks.fig2_sharing import TINY, train_models
-from repro.training import data as D
 from repro.training.trainer import evaluate
 
 

@@ -1,13 +1,17 @@
 """End-to-end driver (deliverable b): serve a small model with batched
-multi-agent requests through the REAL disaggregated engine — on the paged
-KV data plane.
+multi-agent requests through the REAL disaggregated engine — via the
+request-centric API (``repro.serving.api``).
 
-Actual JAX models on CPU: a frozen base prefill worker writes KV into a
-shared physical page pool (``PagedKVPool``), three heterogeneous decode
-workers receive ZERO-COPY handoffs (a block-table reference + page refcounts,
-no tensor copy), and each turn's three agent requests are decoded together by
-the continuous-batch stepper. This is the paper's §3.3 pipeline in miniature:
-shared/partial prefill -> block-table handoff -> selective batched decode.
+Actual JAX models on CPU: each session is a ``SharedContext`` — ONE
+prefilled prefix in the shared physical page pool (``PagedKVPool``) that
+three heterogeneous decode models attach to with zero-copy handoffs (a
+block-table reference + page refcounts, no tensor copy). Requests are
+``RequestOutput`` streaming handles: tokens arrive per engine step (TTFT and
+inter-token gaps are measured below), finish reasons are per-request, and
+every turn's requests across ALL sessions and agents decode together in the
+fused continuous-batch stepper. This is the paper's §3.3 pipeline in
+miniature: shared/partial prefill -> block-table handoff -> selective
+batched decode.
 
 Run:  PYTHONPATH=src python examples/serve_disaggregated.py   (~2 min)
 """
@@ -20,8 +24,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serving.engine import LocalDisaggEngine
 from repro.models import init_params
+from repro.serving.api import SamplingParams
+from repro.serving.engine import LocalDisaggEngine
 
 CFG = ModelConfig(name="serve-demo", arch_type="dense", n_layers=3,
                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -41,33 +46,37 @@ def main():
     n_sessions, turns, gen_len = 4, 2, 8
     t0 = time.time()
     total_gen = 0
-    # sessions advance in lockstep so each turn's requests decode TOGETHER:
-    # per turn, one partial prefill per session, 3 zero-copy handoffs each,
-    # and one continuous-batch drive where every agent model steps a batch
-    # of n_sessions sequences at once.
-    ctxs = {sid: list(rng.integers(4, 60, size=48))        # system prompts
+    # one SharedContext per session: the shared prefix is a first-class API
+    # object — no raw session-id bookkeeping, no manual end_session. Each
+    # turn extends every context and fans three agents out over it; the
+    # engine decodes all sessions x agents in one continuous batch.
+    ctxs = {sid: eng.shared_context(rng.integers(4, 60, size=48))
             for sid in range(n_sessions)}
+    ttfts, itls = [], []
     for turn in range(turns):
-        for sid in ctxs:
-            ctxs[sid] += list(rng.integers(4, 60, size=12))  # obs/delta
+        for ctx in ctxs.values():
+            ctx.extend(rng.integers(4, 60, size=12))       # obs/delta
         t1 = time.time()
-        rids = {(sid, a): eng.submit(sid, ctxs[sid], a, gen_tokens=gen_len)
-                for sid in ctxs for a in AGENTS}
-        eng.run()
+        outs = {(sid, a): ctx.generate(a, params=SamplingParams(
+                    max_tokens=gen_len))
+                for sid, ctx in ctxs.items() for a in AGENTS}
+        eng.run()                                          # drive to finish
         wall = time.time() - t1
-        for (sid, a), r in rids.items():
-            out = eng.result(r)
-            ctxs[sid] += list(out)                         # append outputs
-            total_gen += len(out)
-        print(f"turn {turn}: {len(rids)} requests "
+        for (sid, a), out in outs.items():
+            assert out.finished and out.finish_reason == "length"
+            ctxs[sid].extend(out.tokens)                   # outputs join ctx
+            total_gen += len(out.tokens)
+            ttfts.append(out.ttft)
+            itls.extend(out.inter_token_latencies())
+        print(f"turn {turn}: {len(outs)} requests "
               f"({n_sessions} sessions x {len(AGENTS)} agents), "
-              f"ctx {len(ctxs[0]):4d} tok, wall {wall * 1e3:6.1f}ms")
-    for sid in ctxs:
-        eng.end_session(sid)
+              f"ctx {len(ctxs[0].tokens):4d} tok, wall {wall * 1e3:6.1f}ms")
+    for ctx in ctxs.values():
+        ctx.close()
 
     dt = time.time() - t0
     s = eng.stats
-    print(f"\n== summary ==")
+    print("\n== summary ==")
     print(f"generated {total_gen} tokens in {dt:.1f}s "
           f"({total_gen / dt:.1f} tok/s on 1 CPU core)")
     print(f"prefill computed {s.prefill_tokens_computed} tokens, "
@@ -78,6 +87,8 @@ def main():
     print(f"decode: {s.decode_tokens} tokens in {s.decode_steps} batched "
           f"steps (mean batch {s.decode_batch_mean:.1f}), "
           f"{s.cow_page_copies} copy-on-write page clones")
+    print(f"streaming: mean TTFT {1e3 * float(np.mean(ttfts)):.1f}ms, "
+          f"p95 inter-token gap {1e3 * float(np.percentile(itls, 95)):.1f}ms")
     print("every agent decoded from the SAME shared base pages; in the "
           "baseline each of the 3 models would have re-prefilled the full "
           "context (3x prefill compute, 3x KV storage) and copied the "

@@ -7,7 +7,7 @@ dry-run input specs, and the serving cost model.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # Layer kinds usable in ``layer_pattern`` (the repeating block group).

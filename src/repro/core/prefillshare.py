@@ -90,10 +90,16 @@ def base_prefill_paged(cfg: ModelConfig, base_params: Params, new_tokens, *,
 
 
 _CHUNK_STEPS: dict = {}
+#: retrace counter per config (the trace-scaling tests read this): the jitted
+#: chunk step retraces per distinct (B, S, npages) shape — with the
+#: scheduler's power-of-two table bucketing, npages contributes O(log pages)
+#: retraces instead of one per page of prefix growth.
+CHUNK_TRACES: dict = {}
 
 
 def _make_chunk_step(cfg: ModelConfig):
     def _step(params, toks, pos, cache):
+        CHUNK_TRACES[cfg] = CHUNK_TRACES.get(cfg, 0) + 1   # once per trace
         _, new_cache, _ = forward(cfg, params, toks, cache=cache, pos=pos,
                                   logits="hidden")
         return new_cache
@@ -260,7 +266,7 @@ class CacheSchema:
 def model_fingerprint(cfg: ModelConfig, params: Params) -> str:
     """Cheap, deterministic parameter fingerprint (sum/norm of a few leaves)."""
     leaves = jax.tree.leaves(params)
-    probe = [float(jnp.sum(l).astype(jnp.float32)) for l in leaves[:4]]
+    probe = [float(jnp.sum(leaf).astype(jnp.float32)) for leaf in leaves[:4]]
     blob = json.dumps({"cfg": cfg.name, "n": len(leaves), "probe": probe})
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
 

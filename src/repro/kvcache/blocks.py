@@ -15,7 +15,7 @@ remains the usable capacity.
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 class PoolExhausted(Exception):

@@ -8,7 +8,7 @@ construction), which is exactly the paper's Eq. 8 -> Eq. 9 memory change.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import ATTN, LOCAL_ATTN, RGLRU, SSD, ModelConfig
 from repro.kvcache.blocks import BlockPool, PoolExhausted
@@ -141,6 +141,18 @@ class CacheManager:
 
     def release(self, alloc: Allocation) -> None:
         self.pool.unref(alloc.blocks)
+
+    def abandon(self, alloc: Allocation) -> None:
+        """Reclaim an in-flight allocation that will NEVER be committed (an
+        aborted request's chunk-granular pages). The cached prefix pages it
+        referenced return to the LRU cache — they hold valid published KV
+        other requests can still hit — while the tail pages acquired via
+        ``acquire``/``extend`` are hard-freed: their KV is partially written
+        and was never published to the prefix index, so retaining them could
+        only alias garbage. Free-page count returns exactly to the
+        pre-request baseline."""
+        self.pool.unref(alloc.cached_blocks)
+        self.pool.drop(alloc.new_blocks)
 
     def record_hit(self, n_tokens: int) -> None:
         """Account a request served ENTIRELY from resident pages without a

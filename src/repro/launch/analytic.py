@@ -17,7 +17,7 @@ Conventions:
 """
 from __future__ import annotations
 
-from repro.configs.base import (ATTN, LOCAL_ATTN, RGLRU, SSD, INPUT_SHAPES,
+from repro.configs.base import (ATTN, LOCAL_ATTN, SSD, INPUT_SHAPES,
                                 ModelConfig)
 from repro.kvcache.manager import kv_bytes_per_token, state_bytes_per_seq
 

@@ -31,6 +31,7 @@ def run_engine(args):
     import numpy as np
     from repro.configs.base import ModelConfig
     from repro.models import init_params
+    from repro.serving.api import SamplingParams
     from repro.serving.engine import LocalDisaggEngine
 
     cfg = ModelConfig(name="local", arch_type="dense", n_layers=3,
@@ -45,7 +46,8 @@ def run_engine(args):
     for turn in range(args.turns):
         for a in decs:
             ctx += list(rng.integers(4, 60, size=8))
-            out = eng.invoke(0, ctx, a, gen_tokens=args.gen)
+            out = eng.generate(a, ctx, SamplingParams(max_tokens=args.gen),
+                               session=0).result()
             ctx += list(out)
             print(f"turn {turn} {a}: ctx={len(ctx)} gen={out.tolist()}")
     s = eng.stats

@@ -16,11 +16,9 @@ and compiles against these.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, ModelConfig
 from repro.launch.mesh import axis_size, data_axes
@@ -128,7 +126,6 @@ def build(cfg: ModelConfig, shape_name: str, mesh, *,
     p_shard = params_shardings(
         p_structs, mesh, fsdp=(shp.kind == "train" or infer_fsdp))
     bs = lambda s: batch_sharding(s, mesh)
-    rep = NamedSharding(mesh, P())
 
     npfx = cfg.n_prefix_embeds if cfg.input_mode == "mixed" else 0
     enc_len = S // 2 if cfg.is_encdec else 0

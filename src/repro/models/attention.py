@@ -85,7 +85,7 @@ def _flash_fwd_impl(qg, k, v, q_pos, k_pos, window, softcap, q_chunk, kv_chunk):
         qb, qp = args  # (B, Cq, Hkv, G, D), (B, Cq)
 
         def kv_step(carry, xs):
-            m, l, acc = carry
+            m, lden, acc = carry
             kb, vb, kpb = xs
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
                            kb.astype(jnp.float32))
@@ -95,17 +95,17 @@ def _flash_fwd_impl(qg, k, v, q_pos, k_pos, window, softcap, q_chunk, kv_chunk):
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None]) * mask  # mask kills fully-masked rows
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
+            lden = lden * corr + p.sum(axis=-1)
             acc = acc * corr[..., None] + jnp.einsum(
                 "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
-            return (m_new, l, acc), None
+            return (m_new, lden, acc), None
 
         m0 = jnp.full((B, Hkv, G, Cq), _NEG, jnp.float32)
         l0 = jnp.zeros((B, Hkv, G, Cq), jnp.float32)
         a0 = jnp.zeros((B, Hkv, G, Cq, D), jnp.float32)
-        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc))
-        o = acc / jnp.maximum(l, 1e-30)[..., None]
-        lse = m + jnp.log(jnp.maximum(l, 1e-30))           # (B,Hkv,G,Cq)
+        (m, lden, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc))
+        o = acc / jnp.maximum(lden, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(lden, 1e-30))           # (B,Hkv,G,Cq)
         return jnp.moveaxis(o, 3, 1).astype(v.dtype), lse
 
     if nq == 1:

@@ -16,7 +16,6 @@ which is the paper's execution pipeline (§3.3) expressed as one function.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax

@@ -91,8 +91,8 @@ def rglru_apply(p, x, cfg, cache=None):
         # fold initial state into the first step, then associative scan
         b = b.at[:, 0].add(a[:, 0] * h0)
 
-        def combine(l, r_):
-            al, bl = l
+        def combine(lt, r_):
+            al, bl = lt
             ar, br = r_
             return al * ar, br + ar * bl
 

@@ -1,4 +1,14 @@
+from repro.serving.api import (FINISH_ABORT, FINISH_EOS, FINISH_LENGTH,
+                               FINISH_STOP, RequestOutput, SamplingParams,
+                               SharedContext)
 from repro.serving.costmodel import CostModel
 from repro.serving.decode import FusedDecodePlane, StackedDecoders
 from repro.serving.simulator import ServingConfig, Simulator
 from repro.serving.workload import PATTERNS, Session, make_sessions
+
+__all__ = [
+    "FINISH_ABORT", "FINISH_EOS", "FINISH_LENGTH", "FINISH_STOP",
+    "RequestOutput", "SamplingParams", "SharedContext",
+    "CostModel", "FusedDecodePlane", "StackedDecoders",
+    "ServingConfig", "Simulator", "PATTERNS", "Session", "make_sessions",
+]

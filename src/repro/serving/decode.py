@@ -26,7 +26,11 @@ Layout per step (``StackedDecoders.step``):
     shared pool — bit-exact, because pages are private per sequence (the
     lane-local copies are dead after the gather and fuse away).
 
-Greedy outputs are asserted identical to the per-model loop
+Per-request SamplingParams execute INSIDE the fused step (serving/
+sampling.py): each real sequence's logits row is gathered out of its lane
+and sampled with a PRNG key folded from (seed, position) — batch-packing-
+invariant — while temperature=0 rows take the exact argmax graph, keeping
+greedy outputs asserted identical to the per-model loop
 (tests/test_fused_decode.py); the per-model path remains available as
 ``LocalDisaggEngine(fused=False)`` for comparison.
 
@@ -41,11 +45,29 @@ import numpy as np
 
 from repro.core.lora import stack_params
 from repro.models import forward
+from repro.serving.sampling import sample_step
 
 
 def next_pow2(n: int) -> int:
     """Smallest power of two >= n (>= 1): the block-table width bucket."""
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+def sampling_arrays(seqs):
+    """Per-sequence (temperature, top_k, top_p, seed) arrays for a decode
+    batch, aligned with ``seqs`` (values, not trace keys — changing a
+    request's SamplingParams never retraces the step), plus a host-side
+    ``greedy_only`` flag. The flag IS a (binary) trace key: an all-greedy
+    batch — the default, and every pre-API workload — dispatches an
+    argmax-only step with none of the sampling graph's sort/softmax/draw
+    dead weight on the decode hot path."""
+    temps = np.asarray([s.params.temperature for s in seqs], np.float32)
+    top_ks = np.asarray([s.params.top_k for s in seqs], np.int32)
+    top_ps = np.asarray([s.params.top_p for s in seqs], np.float32)
+    seeds = np.asarray([s.params.seed for s in seqs], np.int32)
+    greedy_only = bool((temps <= 0.0).all())
+    return (jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
+            jnp.asarray(seeds), greedy_only)
 
 
 def group_by_config(decoders):
@@ -78,7 +100,8 @@ class StackedDecoders:
         cfg, n_full, page = self.cfg, self.kvpool.n_full, self.page_size
         wire = self.kvpool.wire_decode_cache
 
-        def fused(stacked, state, toks, pos, bts, seq_m, seq_b):
+        def fused(stacked, state, toks, pos, bts, seq_m, seq_b,
+                  temps, top_ks, top_ps, seeds, greedy_only):
             # Python body runs once per trace: count retraces here.
             self.traces += 1
 
@@ -86,9 +109,9 @@ class StackedDecoders:
                 cache = wire(state, bt, n_full)      # state: shared, unbatched
                 logits, new_cache, _ = forward(cfg, params, t[:, None],
                                                cache=cache, pos=p)
-                return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+                return logits, new_cache
 
-            nxt, caches = jax.vmap(lane)(stacked, toks, pos, bts)
+            lg_all, caches = jax.vmap(lane)(stacked, toks, pos, bts)
             # Each real sequence wrote exactly ONE row, at (page, slot) named
             # by its own block table — gather those rows out of the lane-local
             # pool copies and scatter them into the shared state. Pages are
@@ -113,18 +136,31 @@ class StackedDecoders:
                 new_tail.append(
                     {"k": st["k"].at[pg, slot].set(ko[seq_m, pg, slot]),
                      "v": st["v"].at[pg, slot].set(vo[seq_m, pg, slot])})
-            return (nxt[seq_m, seq_b],
-                    {"groups": new_groups, "tail": new_tail})
+            # per-request sampling, INSIDE the fused step (no extra
+            # dispatch): each real sequence's logits row is gathered out of
+            # its lane and sampled with a key folded from (seed, position) —
+            # batch-packing-invariant; temperature=0 rows are exact argmax
+            # (serving/sampling.py), keeping greedy outputs bit-identical.
+            # greedy_only is STATIC: an all-greedy batch traces an
+            # argmax-only step, paying none of the sampling graph.
+            lg = lg_all[seq_m, seq_b]                               # (N, V)
+            if greedy_only:
+                nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+            else:
+                nxt = sample_step(lg, pos[seq_m, seq_b], temps, top_ks,
+                                  top_ps, seeds)
+            return nxt, {"groups": new_groups, "tail": new_tail}
 
         # donate the pool buffers (arg 1) where donation is honoured, so the
         # fused step appends KV in place — mirrors kvcache.paged.copy_page
         donate = (1,) if jax.default_backend() == "tpu" else ()
-        return jax.jit(fused, donate_argnums=donate)
+        return jax.jit(fused, donate_argnums=donate, static_argnums=(11,))
 
     # ------------------------------------------------------------------
     def step(self, seqs) -> np.ndarray:
-        """Advance every sequence (any mix of this group's models) one greedy
-        token in ONE jitted forward; returns next tokens aligned with
+        """Advance every sequence (any mix of this group's models) one token
+        in ONE jitted forward — sampled per each sequence's SamplingParams
+        (greedy when temperature=0); returns next tokens aligned with
         ``seqs``. Tail pages must already cover position ``pos``."""
         M, page = len(self.model_ids), self.page_size
         counts = [0] * M
@@ -146,7 +182,8 @@ class StackedDecoders:
         seq_b = jnp.asarray([b for _, b in coords], jnp.int32)
         nxt, new_state = self._step(self.stacked, self.kvpool.decode_state(),
                                     jnp.asarray(toks), jnp.asarray(pos),
-                                    jnp.asarray(bts), seq_m, seq_b)
+                                    jnp.asarray(bts), seq_m, seq_b,
+                                    *sampling_arrays(seqs))
         self.kvpool.absorb_decode_state(new_state)
         self.dispatches += 1
         return np.asarray(nxt)

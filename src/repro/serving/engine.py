@@ -4,7 +4,17 @@ Runs actual models: a pool of prefill workers hosting the frozen base model
 (selected per-session by the PrefillRouter), one shared physical
 ``PagedKVPool`` whose pages back every allocation the per-worker
 ``CacheManager``s make, and a set of task-specific decode workers that run
-CONTINUOUS-BATCH greedy decode over the pool.
+CONTINUOUS-BATCH decode over the pool, sampled per-request.
+
+The public surface is the request-centric API (``repro.serving.api``, see
+docs/api.md): ``generate(model_id, tokens, SamplingParams(...))`` returns a
+streaming ``RequestOutput`` (per-token callbacks/iterator, finish reasons,
+TTFT/ITL timestamps), ``shared_context(prefix)`` opens a first-class shared
+prefix that many decode models attach to, and ``abort(request)`` cancels at
+any lifecycle stage with page refcounts returned to baseline. SamplingParams
+execute inside the jitted decode step; temperature=0 (the default) is the
+exact historical greedy graph. The legacy ``submit``/``invoke`` surface
+survives as a thin DeprecationWarning shim over the same internals.
 
 The run loop is owned by the chunked-prefill scheduler
 (``repro.serving.scheduler``): with ``chunked=True`` each step packs one
@@ -46,13 +56,14 @@ share one accounting path.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-import time
 
 from repro.configs.base import ModelConfig
 from repro.core.prefillshare import (base_prefill, base_prefill_paged,
@@ -62,9 +73,12 @@ from repro.kvcache.handoff import HandoffChannel, transfer_cache
 from repro.kvcache.manager import CacheManager
 from repro.kvcache.paged import PagedKVPool
 from repro.models import forward
+from repro.serving.api import (FINISH_ABORT, FINISH_LENGTH, RequestOutput,
+                               SamplingParams, SharedContext)
 from repro.serving.backpressure import ThroughputEWMA
-from repro.serving.decode import FusedDecodePlane
+from repro.serving.decode import FusedDecodePlane, sampling_arrays
 from repro.serving.router import PrefillRouter
+from repro.serving.sampling import sample_step
 from repro.serving.scheduler import (ChunkedScheduler, Request,
                                      SchedulerConfig)
 
@@ -99,6 +113,8 @@ class DecodeSeq:
     pos: int                      # tokens currently in the cache
     next_token: int               # token whose KV the next step writes
     remaining: int
+    params: SamplingParams = field(default_factory=SamplingParams)
+    finish_reason: str | None = None   # set on eos/stop; None -> length
     out: list = field(default_factory=list)
 
 
@@ -266,40 +282,70 @@ class DecodeWorker:
         self._step = None
 
     # ---- paged continuous batching ----
-    def step(self, tokens, pos, cache):
-        """One batched greedy step: feed ``tokens`` (B,) at positions ``pos``
-        (B,), paged cache attached; returns (next_tokens (B,), new_cache)."""
+    def step(self, tokens, pos, cache, temps, top_ks, top_ps, seeds,
+             greedy_only):
+        """One batched decode step: feed ``tokens`` (B,) at positions ``pos``
+        (B,), paged cache attached, per-sequence sampling controls (B,)-
+        aligned; returns (next_tokens (B,), new_cache). Sampling runs inside
+        the jitted step; temperature=0 rows are exact argmax (the historical
+        greedy path, bit-identical), and an all-greedy batch (``greedy_only``
+        static flag) traces an argmax-only step with no sampling graph."""
         if self._step is None:
             cfg = self.cfg
 
-            def _step(params, toks, pos, cache):
+            def _step(params, toks, pos, cache, temps, top_ks, top_ps,
+                      seeds, greedy_only):
                 logits, new_cache, _ = forward(cfg, params, toks[:, None],
                                                cache=cache, pos=pos)
-                return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+                if greedy_only:
+                    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                else:
+                    nxt = sample_step(logits, pos, temps, top_ks, top_ps,
+                                      seeds)
+                return nxt, new_cache
 
-            # jit keyed on (B, npages) shapes; retraces only when the batch
-            # composition or table width changes. The cache (pool pages +
-            # block tables) is donated where donation is honoured, so the
-            # step appends KV in place; make_decode_cache/absorb_decode_cache
-            # are the donation-aware pair around this call.
+            # jit keyed on (B, npages) shapes + the binary greedy_only flag;
+            # retraces only when the batch composition or table width
+            # changes (sampling controls are VALUES, never trace keys). The
+            # cache (pool pages + block tables) is donated where donation is
+            # honoured, so the step appends KV in place;
+            # make_decode_cache/absorb_decode_cache are the donation-aware
+            # pair around this call.
             donate = (3,) if jax.default_backend() == "tpu" else ()
-            self._step = jax.jit(_step, donate_argnums=donate)
-        return self._step(self.dec_params, tokens, pos, cache)
+            self._step = jax.jit(_step, donate_argnums=donate,
+                                 static_argnums=(8,))
+        return self._step(self.dec_params, tokens, pos, cache,
+                          temps, top_ks, top_ps, seeds, greedy_only)
 
     # ---- dense fallback ----
     def generate(self, cache, start_pos: int, first_token: int,
-                 n_tokens: int) -> np.ndarray:
+                 params: SamplingParams) -> tuple[np.ndarray, str]:
+        """Legacy B=1 dense loop, now under the same SamplingParams contract
+        as the paged planes. Returns (tokens, finish_reason)."""
         cfg = self.cfg
         pos = jnp.array([start_pos], jnp.int32)
         tok = jnp.array([first_token], jnp.int32)
-        out = []
-        for _ in range(n_tokens):
+        samp = jnp.asarray([params.temperature], jnp.float32), \
+            jnp.asarray([params.top_k], jnp.int32), \
+            jnp.asarray([params.top_p], jnp.float32), \
+            jnp.asarray([params.seed or 0], jnp.int32)
+        greedy_only = params.temperature <= 0
+        out, reason = [], FINISH_LENGTH
+        for _ in range(params.max_tokens):
             logits, cache, _ = forward(cfg, self.dec_params, tok[:, None],
                                        cache=cache, pos=pos)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(int(tok[0]))
+            if greedy_only:
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            else:
+                tok = sample_step(logits, pos, *samp)
+            t = int(tok[0])
+            out.append(t)
             pos = pos + 1
-        return np.asarray(out, np.int32)
+            stop = params.is_stop(t)
+            if stop is not None:
+                reason = stop
+                break
+        return np.asarray(out, np.int32), reason
 
 
 # ======================================================================
@@ -362,8 +408,16 @@ class LocalDisaggEngine:
                                   policy=sched_policy))
         self._results: dict[int, np.ndarray] = {}
         self._fetched: set[int] = set()
+        self._aborted: set[int] = set()
         self._next_rid = 0
         self._next_seq = 0
+        # request-centric API state: live streaming handles, sessions owned
+        # by the engine (SharedContext / one-shot generate) rather than the
+        # caller. Context sids live in a high namespace so they can never
+        # collide with caller-chosen ints on the legacy surface.
+        self._requests: dict[int, RequestOutput] = {}
+        self._ephemeral_sids: dict[int, int] = {}      # rid -> auto session
+        self._next_ctx_sid = 1 << 40
 
     #: half-life of the issued-work router signal, in seconds of WALL TIME.
     #: Decay must be a function of elapsed time, not of pick count — a
@@ -394,7 +448,8 @@ class LocalDisaggEngine:
         return self.prefill_workers[self.router.pick(sid, now, backlogs)]
 
     def _handoff_seq(self, block_table, n: int, sid: int, model_id: str,
-                     gen_tokens: int, first_token: int, rid: int) -> DecodeSeq:
+                     params: SamplingParams, first_token: int,
+                     rid: int) -> DecodeSeq:
         """Zero-copy handoff: block-table reference + page refcounts, with a
         page-level copy-on-write clone of a partially-filled tail page so the
         decode sequence can append privately. Raises PoolExhausted (with the
@@ -423,35 +478,216 @@ class LocalDisaggEngine:
         self.stats.handoffs += 1
         self.stats.handoff_bytes += plan.bytes         # metadata only
         return DecodeSeq(rid, sid, model_id, bt, shared, private, n,
-                         first_token, gen_tokens)
+                         first_token, params.max_tokens, params)
 
     def submit(self, sid: int, context_tokens, model_id: str,
                gen_tokens: int, first_token: int = 2,
                priority: int = 0) -> int:
-        """Queue one generation request; drive with ``run`` (or ``step``).
-        Returns a request id.
+        """DEPRECATED legacy surface: queue one greedy, fixed-length request
+        against a caller-managed session id; drive with ``run``/``step`` and
+        fetch via ``result``/``pop_result``. Use ``generate`` (a streaming
+        ``RequestOutput`` with SamplingParams and abort) or a
+        ``shared_context`` instead — this shim survives only as a
+        token-identical wrapper over that path."""
+        warnings.warn(
+            "LocalDisaggEngine.submit() is deprecated; use "
+            "engine.generate(model_id, tokens, SamplingParams(...)) or "
+            "engine.shared_context(prefix).generate(...) instead",
+            DeprecationWarning, stacklevel=2)
+        return self._submit(sid, context_tokens, model_id,
+                            SamplingParams(max_tokens=gen_tokens),
+                            first_token, priority)
+
+    def _submit(self, sid: int, context_tokens, model_id: str | None,
+                params: SamplingParams, first_token: int = 2,
+                priority: int = 0) -> int:
+        """Queue one generation request (internal, both API surfaces).
 
         Chunked mode: the request enters the scheduler's admission queue and
         its prompt is prefilled in token-budget chunks interleaved with
         decode, ordered by ``priority`` under the priority policy. Legacy
         mode: whole-prompt prefill + handoff happen here, synchronously and
-        in call order, so ``priority`` has no effect."""
+        in call order, so ``priority`` has no effect. ``max_tokens == 0`` is
+        a prefill-only request: the prompt becomes resident (and published
+        for prefix reuse) but no decode sequence is created."""
         assert self.paged, "submit/run requires the paged data plane"
         rid = self._next_rid
         self._next_rid += 1
+        params = self._resolve_seed(params, rid)
         tokens = [int(t) for t in np.asarray(context_tokens)]
         if self.chunked:
             self.scheduler.add(Request(
                 rid=rid, sid=sid, model_id=model_id, tokens=tokens,
-                gen_tokens=gen_tokens, first_token=first_token,
-                priority=priority, seq=self._next_seq))
+                gen_tokens=params.max_tokens, first_token=first_token,
+                priority=priority, seq=self._next_seq, params=params))
             self._next_seq += 1
             return rid
         worker = self._pick_worker(sid)
         bt, n = worker.prefill(sid, tokens)
+        if params.max_tokens == 0:
+            self._finish_prefill_only(rid)
+            return rid
         self.scheduler.add_decode_seq(self._handoff_seq(
-            bt, n, sid, model_id, gen_tokens, first_token, rid))
+            bt, n, sid, model_id, params, first_token, rid))
         return rid
+
+    # ------------------------------------------------------------------
+    # request-centric API (repro.serving.api)
+    # ------------------------------------------------------------------
+    def generate(self, model_id: str, tokens,
+                 params: SamplingParams | None = None, *, session: int | None = None,
+                 priority: int = 0, first_token: int = 2,
+                 stream_callback=None) -> RequestOutput:
+        """Queue one generation and return its streaming ``RequestOutput``.
+
+        ``session=None`` runs the request in an engine-owned one-shot
+        session, released automatically when the request finishes (or is
+        aborted) — no manual ``end_session``. Pass a ``SharedContext``'s
+        session (via ``ctx.generate``) to attach to a shared prefix.
+        Iterate the handle / call ``result()`` to drive the engine, or drive
+        it yourself with ``run()``/``step()``."""
+        params = SamplingParams() if params is None else params
+        ephemeral = session is None
+        sid = self._new_context_sid() if ephemeral else session
+        if not self.paged:
+            params = self._resolve_seed(params, self._next_rid)
+            return self._generate_dense(sid, tokens, model_id, params,
+                                        first_token, ephemeral,
+                                        stream_callback)
+        rid = self._next_rid                      # _submit assigns this rid
+        params = self._resolve_seed(params, rid)  # handle sees the real seed
+        out = RequestOutput(self, rid, sid, model_id, params)
+        if stream_callback is not None:
+            out.add_callback(stream_callback)
+        self._requests[rid] = out
+        if ephemeral:
+            self._ephemeral_sids[rid] = sid
+        try:
+            got = self._submit(sid, tokens, model_id, params, first_token,
+                               priority)
+        except Exception:
+            # eager-mode prefill can raise (PoolExhausted) after the handle
+            # was registered: unwind so retries don't leak orphan handles
+            self._requests.pop(rid, None)
+            self._ephemeral_sids.pop(rid, None)
+            raise
+        assert got == rid
+        return out
+
+    def shared_context(self, prefix_tokens=(), *,
+                       prefill: bool = True) -> SharedContext:
+        """Open a first-class shared prefix (see ``repro.serving.api``):
+        one prefilled context that multiple ``ctx.generate(model_id, tail)``
+        calls attach to — the paper's execution pattern as the API's main
+        verb. Use as a context manager; exit releases the pages."""
+        return SharedContext(self, prefix_tokens, prefill=prefill)
+
+    def abort(self, request) -> bool:
+        """Cancel a request at any lifecycle stage. Accepts a
+        ``RequestOutput`` or a raw request id. Returns True if the request
+        was still live (False: already finished, already aborted, unknown).
+
+        Queued: removed before any pages are touched. Prefilling (including
+        held under pool backpressure): its chunk-granular allocation is
+        reclaimed — cached prefix pages return to the LRU cache, partially
+        written tail pages are dropped. Decoding: its handoff refs and
+        private pages are released. In every case the pool's free-page count
+        returns exactly to its pre-request baseline."""
+        rid = request.request_id if isinstance(request, RequestOutput) \
+            else int(request)
+        if rid in self._results or rid in self._fetched \
+                or rid in self._aborted:
+            return False
+        sched = self.scheduler
+        for r in sched.waiting:                    # queued: nothing held yet
+            if r.rid == rid:
+                sched.waiting.remove(r)
+                self._on_request_aborted(rid)
+                return True
+        for r in sched.prefilling:                 # mid-chunk / held / stalled
+            if r.rid != rid:
+                continue
+            sched.prefilling.remove(r)
+            if r.sibling_bt is not None:
+                self.block_pool.unref(r.sibling_bt)   # drop the sibling pin
+            elif r.committed:
+                pass       # the session owns the allocation now; pages stay
+            else:
+                r.worker.mgr.abandon(r.alloc)
+                r.worker.pending_chunk_tokens -= r.n - r.done
+            self._on_request_aborted(rid)
+            return True
+        for s in sched.active:                     # decoding
+            if s.rid != rid:
+                continue
+            if s.remaining <= 0:
+                return False   # generation already complete, merely awaiting
+                               # the next step's reap — not abortable
+            sched.active.remove(s)
+            self.block_pool.unref(s.shared_blocks)
+            self.block_pool.drop(s.private_blocks)
+            self._on_request_aborted(rid)
+            return True
+        return False
+
+    @staticmethod
+    def _resolve_seed(params: SamplingParams, rid: int) -> SamplingParams:
+        """``seed=None`` -> a distinct engine-assigned per-request seed (the
+        rid), so N sampled fan-outs over one prompt give N different draws;
+        an explicit seed passes through untouched for cross-run
+        reproducibility. Idempotent once resolved."""
+        if params.seed is not None:
+            return params
+        return dataclasses.replace(params, seed=rid)
+
+    def _new_context_sid(self) -> int:
+        sid = self._next_ctx_sid
+        self._next_ctx_sid += 1
+        return sid
+
+    def _prefill_context(self, sid: int, tokens) -> None:
+        """Make ``tokens`` resident for session ``sid`` (SharedContext
+        warm-up). Eager mode prefills synchronously; chunked mode drives the
+        scheduler until the prefill-only request completes."""
+        assert self.paged, "shared contexts require the paged data plane"
+        rid = self._submit(sid, tokens, None, SamplingParams(max_tokens=0))
+        while rid not in self._results:
+            self.scheduler.step()
+        self.pop_result(rid)                       # empty marker array
+
+    def _finish_prefill_only(self, rid: int) -> None:
+        self._results[rid] = np.zeros(0, np.int32)
+        self._on_request_done(rid, FINISH_LENGTH)
+
+    def _on_request_done(self, rid: int, reason: str) -> None:
+        out = self._requests.pop(rid, None)        # engine-side handle ref:
+        if out is not None:                        # dropped once finished
+            out._mark_finished(reason)
+        sid = self._ephemeral_sids.pop(rid, None)
+        if sid is not None:
+            self.end_session(sid)                  # one-shot session cleanup
+
+    def _on_request_aborted(self, rid: int) -> None:
+        self._aborted.add(rid)
+        self._on_request_done(rid, FINISH_ABORT)
+
+    def _generate_dense(self, sid, tokens, model_id, params, first_token,
+                        ephemeral, stream_callback=None) -> RequestOutput:
+        """Dense-fallback generate (SSM/hybrid archs): synchronous, but the
+        same RequestOutput contract (params honoured, tokens streamed to
+        callbacks, finish reason set)."""
+        out = RequestOutput(self, self._next_rid, sid, model_id, params)
+        self._next_rid += 1
+        if stream_callback is not None:
+            out.add_callback(stream_callback)
+        toks, reason = self._invoke_dense(sid, tokens, model_id, params,
+                                          first_token)
+        for t in toks:
+            out._push(int(t))
+        out._mark_finished(reason)
+        if ephemeral:
+            self.end_session(sid)
+        return out
 
     def run(self) -> None:
         """Drive the scheduler until every queued request finishes: each step
@@ -473,9 +709,16 @@ class LocalDisaggEngine:
 
     def decode_step(self, seqs: list[DecodeSeq]) -> None:
         """Advance every active sequence — across ALL decode models — one
-        greedy token. Fused mode (default): ONE jitted vmapped forward per
+        token, sampled per each request's SamplingParams (temperature=0:
+        exact greedy). Fused mode (default): ONE jitted vmapped forward per
         step per distinct decode config (one total here, every decoder shares
-        the engine config). fused=False: the per-model dispatch loop."""
+        the engine config). fused=False: the per-model dispatch loop.
+
+        Token bookkeeping is centralized here: streaming pushes to the
+        request handles, and eos/stop detection that zeroes ``remaining`` so
+        the scheduler retires the sequence (freeing its budget slot and,
+        via ``_finish``, its pages) on the next step — variable-length
+        finishes mid-flight."""
         if not seqs:
             return
         self._grow_tail_pages(seqs)
@@ -483,26 +726,36 @@ class LocalDisaggEngine:
             before = self.decode_plane.dispatches
             nxt = self.decode_plane.step(seqs)
             self.stats.decode_dispatches += self.decode_plane.dispatches - before
-            for i, s in enumerate(seqs):
-                s.out.append(int(nxt[i]))
-                s.next_token = int(nxt[i])
-                s.pos += 1
-                s.remaining -= 1
         else:
+            nxt = np.zeros(len(seqs), np.int32)
             by_model: dict[str, list] = {}
-            for s in seqs:
-                by_model.setdefault(s.model_id, []).append(s)
-            for mid, group in by_model.items():
-                self._batched_step(mid, group)
+            for i, s in enumerate(seqs):
+                by_model.setdefault(s.model_id, []).append(i)
+            for mid, idx in by_model.items():
+                nxt[idx] = self._batched_step(mid, [seqs[i] for i in idx])
+        for i, s in enumerate(seqs):
+            t = int(nxt[i])
+            s.out.append(t)
+            s.next_token = t
+            s.pos += 1
+            s.remaining -= 1
+            out = self._requests.get(s.rid)
+            if out is not None:
+                out._push(t)
+            reason = s.params.is_stop(t)
+            if reason is not None:
+                s.finish_reason = reason
+                s.remaining = 0                    # retired next reap
         # one ENGINE step regardless of mode, so decode_steps (and
         # decode_batch_mean) mean the same thing fused and legacy
         self.stats.decode_steps += 1
         self.stats.decode_tokens += len(seqs)
 
-    def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> None:
-        """One per-model jitted forward (legacy fused=False dispatch unit).
-        ``decode_step`` owns step/token accounting and has already grown the
-        tail pages for the whole batch."""
+    def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> np.ndarray:
+        """One per-model jitted forward (legacy fused=False dispatch unit);
+        returns the sampled next tokens aligned with ``seqs``.
+        ``decode_step`` owns all bookkeeping and has already grown the tail
+        pages for the whole batch."""
         npages = max(len(s.block_table) for s in seqs)
         bt = np.zeros((len(seqs), npages), np.int32)
         for i, s in enumerate(seqs):
@@ -510,32 +763,36 @@ class LocalDisaggEngine:
         toks = jnp.asarray([s.next_token for s in seqs], jnp.int32)
         pos = jnp.asarray([s.pos for s in seqs], jnp.int32)
         cache = self.kvpool.make_decode_cache(bt)
-        nxt, new_cache = self.decoders[mid].step(toks, pos, cache)
+        nxt, new_cache = self.decoders[mid].step(toks, pos, cache,
+                                                 *sampling_arrays(seqs))
         self.kvpool.absorb_decode_cache(new_cache)
-        nxt = np.asarray(nxt)
-        for i, s in enumerate(seqs):
-            s.out.append(int(nxt[i]))
-            s.next_token = int(nxt[i])
-            s.pos += 1
-            s.remaining -= 1
         self.stats.decode_dispatches += 1
+        return np.asarray(nxt)
 
     def _finish(self, s: DecodeSeq) -> None:
         self._results[s.rid] = np.asarray(s.out, np.int32)
         self.block_pool.unref(s.shared_blocks)   # freed only w/ last holder
         self.block_pool.drop(s.private_blocks)   # generated KV: not reusable
+        self._on_request_done(s.rid, s.finish_reason or FINISH_LENGTH)
 
     # ------------------------------------------------------------------
     def invoke(self, sid: int, context_tokens, model_id: str,
                gen_tokens: int, first_token: int = 2) -> np.ndarray:
-        """One agent invocation: shared/partial prefill -> handoff ->
-        selective decode (paper §3.3 execution pipeline). Drains every
-        pending sequence (batching this request with any prior submits)."""
+        """DEPRECATED legacy surface: one blocking greedy invocation against
+        a caller-managed session id. Use ``generate(...).result()`` or a
+        ``shared_context`` instead; this shim stays token-identical to that
+        path (asserted in tests/test_api.py)."""
+        warnings.warn(
+            "LocalDisaggEngine.invoke() is deprecated; use "
+            "engine.generate(model_id, tokens, SamplingParams(...)).result() "
+            "or engine.shared_context(prefix).generate(...) instead",
+            DeprecationWarning, stacklevel=2)
+        params = SamplingParams(max_tokens=gen_tokens)
         if not self.paged:
-            return self._invoke_dense(sid, context_tokens, model_id,
-                                      gen_tokens, first_token)
-        rid = self.submit(sid, context_tokens, model_id, gen_tokens,
-                          first_token)
+            toks, _ = self._invoke_dense(sid, context_tokens, model_id,
+                                         params, first_token)
+            return toks
+        rid = self._submit(sid, context_tokens, model_id, params, first_token)
         self.run()
         return self.pop_result(rid)
 
@@ -545,6 +802,10 @@ class LocalDisaggEngine:
         if rid in self._fetched:
             raise KeyError(
                 f"request {rid}: result was already fetched via pop_result()")
+        if rid in self._aborted:
+            raise KeyError(
+                f"request {rid}: aborted — no result was produced (streamed "
+                f"tokens, if any, live on its RequestOutput handle)")
         if 0 <= rid < self._next_rid:
             raise KeyError(
                 f"request {rid}: submitted but not finished — still waiting, "
@@ -569,7 +830,7 @@ class LocalDisaggEngine:
         self._fetched.add(rid)
         return self._results.pop(rid)
 
-    def _invoke_dense(self, sid, context_tokens, model_id, gen_tokens,
+    def _invoke_dense(self, sid, context_tokens, model_id, params,
                       first_token):
         worker = self._pick_worker(sid)
         sc = worker.prefill(sid, context_tokens)
@@ -579,7 +840,7 @@ class LocalDisaggEngine:
         plan = self.handoff.plan(sc.n_tokens)
         self.stats.handoffs += 1
         self.stats.handoff_bytes += plan.bytes
-        return dw.generate(cache, sc.n_tokens, first_token, gen_tokens)
+        return dw.generate(cache, sc.n_tokens, first_token, params)
 
     def end_session(self, sid: int):
         for w in self.prefill_workers:

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.prefillshare import base_prefill_chunk
 from repro.kvcache.blocks import PoolExhausted
+from repro.serving.decode import next_pow2
 from repro.serving.scheduler.queue import POLICIES, order_requests
 
 
@@ -69,12 +70,13 @@ class Request:
     """One submitted generation request moving WAITING -> PREFILL -> DECODE."""
     rid: int
     sid: int
-    model_id: str
+    model_id: str | None         # None: prefill-only (gen_tokens == 0)
     tokens: list
     gen_tokens: int
     first_token: int
     priority: int
     seq: int                     # arrival order (fcfs tiebreak)
+    params: object = None        # SamplingParams (None on internal paths)
     tok_hash: int = 0            # precomputed hash of tokens (sibling check)
     worker: object = None        # PrefillWorker, assigned at admission
     alloc: object = None         # CacheManager Allocation (chunk-granular)
@@ -120,11 +122,14 @@ class ChunkedScheduler:
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine step: admit; pack prefill chunks under the budget;
-        promote finished prefills (zero-copy handoff); advance every active
-        sequence one decode token."""
+        """One engine step: reap finished sequences (EOS/stop/length/abort —
+        their budget slots and pages free BEFORE this step's packing); admit;
+        pack prefill chunks under the budget; promote finished prefills
+        (zero-copy handoff); advance every active sequence one decode
+        token."""
         self.stats.steps += 1
-        progress = self._admit()
+        progress = self._reap_finished()
+        progress += self._admit()
         budget = self.cfg.token_budget - len(self.active)
         chunks = self._plan_chunks(budget)
         progress += self._run_chunks(chunks)
@@ -217,7 +222,12 @@ class ChunkedScheduler:
             groups.setdefault(take, []).append((r, start))
         for S, items in groups.items():
             B = len(items)
-            npages = max(len(r.block_table) for r, _ in items)
+            # bucket the chunk block-table width to the next power of two,
+            # exactly like the fused decode step buckets decode tables:
+            # table growth WITHIN a bucket reuses the jitted chunk-step
+            # trace, so prefill retraces stop scaling with prefix length
+            # (padding = sentinel page 0, never live KV)
+            npages = next_pow2(max(len(r.block_table) for r, _ in items))
             toks = np.zeros((B, S), np.int32)
             bt = np.zeros((B, npages), np.int32)
             pos = np.zeros((B,), np.int32)
@@ -252,12 +262,40 @@ class ChunkedScheduler:
             for s in self.active)
 
     # ---- prefill -> decode handoff -------------------------------------
+    def _commit_request(self, r: Request) -> None:
+        """Publish a fully-prefilled (non-sibling) request for prefix reuse
+        + session bookkeeping, exactly once (promotion may retry under pool
+        pressure)."""
+        if r.committed:
+            return
+        from repro.serving.engine import PagedSession
+        w = r.worker
+        w.mgr.commit(r.tokens, r.alloc)
+        old = w.sessions.get(r.sid)
+        w.sessions[r.sid] = PagedSession(
+            r.alloc, list(r.block_table), r.n, list(r.tokens))
+        if old is not None:
+            w.mgr.release(old.alloc)
+        r.committed = True
+
     def _promote(self) -> int:
         promoted = 0
         page = self.engine.page_size
         pool = self.engine.block_pool
         for r in list(self.prefilling):
             if r.done < r.n:
+                continue
+            if r.gen_tokens == 0:
+                # prefill-only request (SharedContext warm-up): commit the
+                # session and finish — no decode model, no handoff, no CoW
+                if r.sibling_bt is not None:
+                    pool.unref(r.sibling_bt)
+                else:
+                    self._commit_request(r)
+                self.prefilling.remove(r)
+                self.promoted.append(r.rid)
+                self.engine._finish_prefill_only(r.rid)
+                promoted += 1
                 continue
             # decode admission control: the handoff's CoW clone plus THIS
             # sequence's worst-case tail growth must fit above the pages
@@ -270,22 +308,11 @@ class ChunkedScheduler:
                 continue
             bt = r.sibling_bt
             if bt is None:
-                if not r.committed:
-                    # publish for prefix reuse + session bookkeeping, exactly
-                    # once (the handoff below may retry under pool pressure)
-                    from repro.serving.engine import PagedSession
-                    w = r.worker
-                    w.mgr.commit(r.tokens, r.alloc)
-                    old = w.sessions.get(r.sid)
-                    w.sessions[r.sid] = PagedSession(
-                        r.alloc, list(r.block_table), r.n, list(r.tokens))
-                    if old is not None:
-                        w.mgr.release(old.alloc)
-                    r.committed = True
+                self._commit_request(r)
                 bt = r.block_table
             try:
                 seq = self.engine._handoff_seq(
-                    bt, r.n, r.sid, r.model_id, r.gen_tokens,
+                    bt, r.n, r.sid, r.model_id, r.params,
                     r.first_token, r.rid)
             except PoolExhausted:
                 self.stats.stalls += 1   # CoW clone page unavailable: retry
@@ -299,22 +326,36 @@ class ChunkedScheduler:
         return promoted
 
     # ---- decode --------------------------------------------------------
-    def _decode_phase(self) -> int:
-        """Advance every active sequence one token. Model grouping is the
-        ENGINE's concern now: the fused decode plane batches all models
-        sharing a config into one vmapped forward (engine.decode_step), so
-        the scheduler no longer splits the batch by model."""
-        eng = self.engine
+    def _reap_finished(self) -> int:
+        """Retire sequences whose generation is over — length exhausted OR
+        terminated early by an eos/stop token (engine.decode_step zeroes
+        ``remaining``). Runs at the TOP of every step, so an early finish
+        frees its token-budget slot, its decode-reserve pages, and its pool
+        pages before this step's packing decisions."""
         still = []
         finished = 0
         for s in self.active:
             if s.remaining > 0:
                 still.append(s)
             else:
-                eng._finish(s)
+                self.engine._finish(s)
                 finished += 1
         self.active = still
+        return finished
+
+    def _decode_phase(self) -> int:
+        """Advance every active sequence one token. Model grouping is the
+        ENGINE's concern now: the fused decode plane batches all models
+        sharing a config into one vmapped forward (engine.decode_step), so
+        the scheduler no longer splits the batch by model.
+
+        The engine steps a COPY of the active list: stream callbacks fire
+        inside decode_step's bookkeeping loop and may re-enter the engine —
+        abort() removes from ``self.active``, an eager generate() appends to
+        it — and either mutation mid-enumeration would cross-wire the step's
+        token/sequence alignment."""
         if not self.active:
-            return finished
-        eng.decode_step(self.active)
-        return finished + len(self.active)
+            return 0
+        stepped = list(self.active)
+        self.engine.decode_step(stepped)
+        return len(stepped)          # self.active may have shrunk mid-step

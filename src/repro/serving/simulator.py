@@ -58,6 +58,13 @@ class ServingConfig:
                                    # requests at chunk granularity — the
                                    # same token-budget slicing the real
                                    # engine's scheduler performs)
+    eos_prob: float = 0.0          # per-token chance a generation stops
+                                   # early (the engine's stop/eos finishes):
+                                   # an invocation's realized length is
+                                   # min(gen_tokens, 1 + Geometric(p)), so
+                                   # early finishes free decode batch slots
+                                   # and HBM mid-flight. 0 = exact lengths
+                                   # (the historical behaviour).
 
 
 @dataclass
@@ -68,7 +75,8 @@ class InvocationRecord:
     issued: float
     ttft: float = 0.0
     done: float = 0.0
-    gen_tokens: int = 0
+    gen_tokens: int = 0          # realized generation length (<= requested)
+    finish_reason: str = "length"  # "eos" when eos_prob cut it short
     prefill_cached: int = 0
     prefill_new: int = 0
     staged: bool = False
@@ -196,6 +204,7 @@ class Simulator:
         self.effective_cap = self.b2.session_cap(scfg.max_concurrent)
         self.router = PrefillRouter(scfg.n_prefill_workers,
                                     policy=scfg.router_policy)
+        self.rng = np.random.default_rng(seed)     # eos_prob length draws
         self.events = []
         self._seq = itertools.count()
         self.admitted = 0
@@ -379,7 +388,18 @@ class Simulator:
         for rid, r in finished:
             self._decode_finished(t, r)
         rid = (st.session.sid, st.inv_idx)
-        dw.active[rid] = {"remaining": float(inv.gen_tokens),
+        # variable-length finishes (the engine's eos/stop semantics): the
+        # realized length is geometric-truncated, so a cut-short generation
+        # releases its batch slot and resident KV to the fluid model early
+        gen = inv.gen_tokens
+        if self.scfg.eos_prob > 0:
+            # numpy's geometric already returns >= 1 (trials to first
+            # success), i.e. exactly "length at which the per-token stop
+            # chance first fires"
+            gen = min(gen, int(self.rng.geometric(self.scfg.eos_prob)))
+            rec.finish_reason = "eos" if gen < inv.gen_tokens else "length"
+        rec.gen_tokens = gen
+        dw.active[rid] = {"remaining": float(gen),
                           "kv_len": float(len(st.context)),
                           "meta": (st, inv, rec)}
         rec.ttft = t + dw.itl() - rec.issued        # first token after one step
@@ -400,8 +420,9 @@ class Simulator:
     def _decode_finished(self, t, r):
         st, inv, rec = r["meta"]
         rec.done = t
-        # generated tokens join the shared context (prompt-construction rule)
-        st.context += st.session.fresh_tokens(inv.gen_tokens,
+        # REALIZED generated tokens join the shared context (an eos-cut
+        # generation contributes its shorter output, like the real engine)
+        st.context += st.session.fresh_tokens(rec.gen_tokens,
                                               salt=2 + st.inv_idx * 2)
         self.t_end = max(self.t_end, t)
         self._next_invocation(t, st)
@@ -438,4 +459,6 @@ class Simulator:
                 [w.busy_time / makespan for w in self.prefill])),
             "evictions": sum(w.mgr.pool.stats.evictions for w in self.prefill),
             "staged_frac": float(np.mean([r.staged for r in recs])) if recs else 0.0,
+            "early_stop_frac": float(np.mean(
+                [r.finish_reason == "eos" for r in recs])) if recs else 0.0,
         }

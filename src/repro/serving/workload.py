@@ -13,7 +13,7 @@ appended by the engine, exactly matching the paper's prompt-construction rule.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -102,7 +102,6 @@ def finetune_cache_conditioned(cfg: ModelConfig, dec_params, base_params,
 
 @functools.partial(jax.jit, static_argnums=(0, 5))
 def _greedy(cfg: ModelConfig, dec_params, cache, pos, first_token, n_steps):
-    B = first_token.shape[0]
 
     def body(carry, _):
         cache, pos, tok = carry

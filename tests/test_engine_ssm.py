@@ -3,7 +3,6 @@ run the REAL disaggregated engine on an attention-free Mamba-2 reduced
 config — the handoff carries SSD+conv state, not KV — and assert
 bit-identical generations vs full-recompute references."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

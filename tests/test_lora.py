@@ -11,7 +11,7 @@ from repro.core.lora import (cache_conditioned_lora_loss, lora_apply,
                              stack_params)
 from repro.models import init_params
 from repro.training import data as D
-from repro.training.optim import AdamW, apply_updates
+from repro.training.optim import AdamW
 from repro.training.trainer import evaluate
 
 CFG = ModelConfig(name="lora-t", arch_type="dense", n_layers=4, d_model=128,

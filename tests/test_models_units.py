@@ -8,7 +8,7 @@ from repro.configs.base import ModelConfig
 from repro.models.moe import moe_apply, moe_init
 from repro.models.rglru import rglru_apply, rglru_init, init_rglru_cache
 from repro.models.rope import apply_rope
-from repro.models.ssd import init_ssd_cache, ssd_apply, ssd_dims, ssd_init, ssd_scan
+from repro.models.ssd import init_ssd_cache, ssd_apply, ssd_init, ssd_scan
 
 KEY = jax.random.PRNGKey(0)
 

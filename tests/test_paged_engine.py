@@ -1,7 +1,6 @@
 """The paged KV data plane: bit-identity vs the dense engine, refcounted
 zero-copy handoff, page-aligned partial prefill, continuous batching."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig

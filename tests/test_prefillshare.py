@@ -9,7 +9,7 @@ from repro.core.prefillshare import (base_prefill, cache_conditioned_loss,
                                      cache_schema, full_ft_loss, mix_caches,
                                      model_fingerprint)
 from repro.kvcache.handoff import HandoffChannel, SchemaMismatch
-from repro.models import forward, init_params
+from repro.models import init_params
 
 CFG = ModelConfig(name="t", arch_type="dense", n_layers=4, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
@@ -35,8 +35,8 @@ def test_gradients_do_not_touch_base():
     prompt, ti, to, m = _batch()
 
     def loss_wrt_base(bp):
-        l, _ = cache_conditioned_loss(CFG, dec, bp, prompt, ti, to, m)
-        return l
+        loss, _ = cache_conditioned_loss(CFG, dec, bp, prompt, ti, to, m)
+        return loss
 
     g = jax.grad(loss_wrt_base)(base)
     total = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
@@ -48,8 +48,8 @@ def test_gradients_flow_to_decoder():
     prompt, ti, to, m = _batch()
 
     def loss_wrt_dec(dp):
-        l, _ = cache_conditioned_loss(CFG, dp, base, prompt, ti, to, m)
-        return l
+        loss, _ = cache_conditioned_loss(CFG, dp, base, prompt, ti, to, m)
+        return loss
 
     g = jax.grad(loss_wrt_dec)(dec)
     total = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
@@ -107,8 +107,8 @@ def test_partial_prefill_extends_cache():
 def test_full_ft_loss_runs():
     p = _params(0)
     prompt, ti, to, m = _batch()
-    l, _ = full_ft_loss(CFG, p, prompt, ti, to, m)
-    assert jnp.isfinite(l)
+    loss, _ = full_ft_loss(CFG, p, prompt, ti, to, m)
+    assert jnp.isfinite(loss)
 
 
 def test_schema_compat_and_handoff_guard():

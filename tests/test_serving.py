@@ -1,6 +1,5 @@
 """Serving simulator + cost model behaviour (paper §4.3 mechanisms)."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.serving.costmodel import CostModel

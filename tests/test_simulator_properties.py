@@ -3,7 +3,6 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="optional dep: property tests only")
 import hypothesis.strategies as st
-import numpy as np
 from hypothesis import given, settings
 
 from repro.configs import get_config
