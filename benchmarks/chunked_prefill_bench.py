@@ -102,8 +102,9 @@ def main(chunk_size: int = 32, token_budget: int = 48, seed: int = 0):
             ("eager", dict()),
             ("chunked", dict(chunked=True, chunk_size=chunk_size,
                              token_budget=token_budget))):
-        eng = LocalDisaggEngine(CFG, base, decs, num_pages=512, page_size=16,
-                                **kw)
+        eng = LocalDisaggEngine(CFG, base, num_pages=512, page_size=16, **kw)
+        for mid, p in decs.items():
+            eng.models.register(mid, p)
         outs, long_outs, wall, toks = _drive(eng, steady, longs)
         itl = [g for o in outs for g in o.inter_token_latencies()]
         rows.append({

@@ -4,6 +4,13 @@ Sweeps session arrival rate for ReAct and Reflexion; baseline vs PrefillShare;
 reports p95 end-to-end latency, throughput, and TTFT. Per the paper's
 protocol, each (system, rate) point picks the best max-concurrent-sessions
 setting from a small sweep.
+
+``--churn SECONDS`` prices model-lifecycle churn on top of any point: every
+interval a decode model hot-(un)registers (the engine's ModelRegistry), and
+the registry-rebuild cost (``ServingConfig.churn_rebuild_s``) freezes the
+fused decode plane's progress for that window. ``--smoke`` runs one small
+churned point end-to-end with sanity assertions (<60 s — the CI
+simulator-smoke job in .github/workflows/tier1.yml).
 """
 from __future__ import annotations
 
@@ -17,28 +24,50 @@ from repro.serving.workload import make_sessions
 
 
 def run_point(arch, pattern, rate, mode, max_conc, n_sessions, seed=0,
-              chips=2, hbm=32e9):
+              chips=2, hbm=32e9, churn_s=0.0):
     cfg = get_config(arch)
     sessions = make_sessions(pattern, n_sessions=n_sessions,
                              arrival_rate=rate, seed=seed)
     sim = Simulator(cfg, ServingConfig(mode=mode, max_concurrent=max_conc,
                                        chips_per_worker=chips,
-                                       hbm_per_worker=hbm), sessions)
+                                       hbm_per_worker=hbm,
+                                       churn_interval_s=churn_s), sessions)
     return sim.run()
 
 
+def smoke(churn_s: float = 2.0) -> dict:
+    """CI gate: one small ReAct point with model churn enabled, end-to-end.
+    Asserts the run completes, churn events fired and were priced, and the
+    churned run is no faster than the identical churn-free run."""
+    quiet = run_point("internlm2-1.8b", "react", 2.0, "prefillshare", 32, 20)
+    churned = run_point("internlm2-1.8b", "react", 2.0, "prefillshare", 32,
+                        20, churn_s=churn_s)
+    assert churned["sessions_done"] == quiet["sessions_done"] == 20
+    assert churned["churn_events"] > 0 and quiet["churn_events"] == 0
+    assert churned["churn_stall_s"] > 0
+    assert churned["p95_e2e_s"] >= quiet["p95_e2e_s"] - 1e-9
+    print("metric,quiet,churned")
+    for k in ("sessions_done", "p95_e2e_s", "throughput_tok_s",
+              "churn_events", "churn_stall_s"):
+        print(f"{k},{quiet[k]:.4g},{churned[k]:.4g}")
+    print(f"# sim-smoke OK: {churned['churn_events']} churn events priced "
+          f"{churned['churn_stall_s']:.3f}s of decode-plane stall")
+    return churned
+
+
 def best_over_concurrency(arch, pattern, rate, mode, n_sessions,
-                          conc_grid=(16, 32, 64, 128)):
+                          conc_grid=(16, 32, 64, 128), churn_s=0.0):
     best = None
     for mc in conc_grid:
-        r = run_point(arch, pattern, rate, mode, mc, n_sessions)
+        r = run_point(arch, pattern, rate, mode, mc, n_sessions,
+                      churn_s=churn_s)
         r["max_concurrent"] = mc
         if best is None or r["throughput_tok_s"] > best["throughput_tok_s"]:
             best = r
     return best
 
 
-def run(quick: bool = True, arch: str = "llama31-8b"):
+def run(quick: bool = True, arch: str = "llama31-8b", churn_s: float = 0.0):
     rates = (1.0, 2.0, 4.0) if quick else (0.5, 1.0, 2.0, 4.0, 6.0, 8.0)
     n_sessions = 60 if quick else 150
     patterns = ("react", "reflexion")
@@ -47,18 +76,19 @@ def run(quick: bool = True, arch: str = "llama31-8b"):
         for rate in rates:
             for mode in ("baseline", "prefillshare"):
                 if quick:
-                    r = run_point(arch, pattern, rate, mode, 64, n_sessions)
+                    r = run_point(arch, pattern, rate, mode, 64, n_sessions,
+                                  churn_s=churn_s)
                     r["max_concurrent"] = 64
                 else:
                     r = best_over_concurrency(arch, pattern, rate, mode,
-                                              n_sessions)
+                                              n_sessions, churn_s=churn_s)
                 r.update({"pattern": pattern, "rate": rate})
                 rows.append(r)
     return rows
 
 
-def main(quick=True):
-    rows = run(quick=quick)
+def main(quick=True, churn_s: float = 0.0):
+    rows = run(quick=quick, churn_s=churn_s)
     cols = ("pattern", "rate", "mode", "p95_e2e_s", "throughput_tok_s",
             "mean_ttft_s", "prefix_hit_ratio", "evictions", "max_concurrent")
     print(",".join(cols))
@@ -77,4 +107,19 @@ def main(quick=True):
 
 
 if __name__ == "__main__":
-    main(quick="--full" not in sys.argv)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small churned point with assertions (CI gate)")
+    ap.add_argument("--full", action="store_true",
+                    help="full rate sweep with per-point concurrency search")
+    ap.add_argument("--churn", type=float, nargs="?", const=2.0, default=0.0,
+                    metavar="SECONDS",
+                    help="model-churn interval (default 2.0 when given "
+                         "without a value; 0 = off)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        main(quick=not args.full, churn_s=args.churn)

@@ -24,9 +24,11 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.lora import lora_init
 from repro.models import init_params
 from repro.serving.api import SamplingParams
 from repro.serving.engine import LocalDisaggEngine
+from repro.serving.registry import DecodeModelSpec, LoRAAdapter
 
 CFG = ModelConfig(name="serve-demo", arch_type="dense", n_layers=3,
                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -37,10 +39,13 @@ AGENTS = ("planner", "coder", "reviewer")
 
 def main():
     base = init_params(CFG, jax.random.PRNGKey(0))
-    decoders = {a: init_params(CFG, jax.random.PRNGKey(7 + i))
-                for i, a in enumerate(AGENTS)}
-    eng = LocalDisaggEngine(CFG, base, decoders, num_pages=2048)
+    eng = LocalDisaggEngine(CFG, base, num_pages=2048)
     assert eng.paged, "dense arch should run on the paged data plane"
+    # the decode-model set is a LIVE lifecycle surface: agents register with
+    # the engine (full fine-tunes here), and more can hot-join mid-traffic
+    for i, a in enumerate(AGENTS):
+        eng.models.register(a, DecodeModelSpec(
+            full=init_params(CFG, jax.random.PRNGKey(7 + i))))
 
     rng = np.random.default_rng(0)
     n_sessions, turns, gen_len = 4, 2, 8
@@ -48,18 +53,30 @@ def main():
     total_gen = 0
     # one SharedContext per session: the shared prefix is a first-class API
     # object — no raw session-id bookkeeping, no manual end_session. Each
-    # turn extends every context and fans three agents out over it; the
-    # engine decodes all sessions x agents in one continuous batch.
+    # turn extends every context and fans the registered agents out over it;
+    # the engine decodes all sessions x agents in one continuous batch.
     ctxs = {sid: eng.shared_context(rng.integers(4, 60, size=48))
             for sid in range(n_sessions)}
     ttfts, itls = [], []
     for turn in range(turns):
+        if turn == 1:
+            # hot-register an adapter-factored agent between turns, while
+            # the engine is live: a LoRA spec stores ONE base copy + tiny
+            # A/B factors, merged inside the jitted fused decode step — the
+            # plane relayouts at the next step boundary and every surviving
+            # stream keeps decoding bit-identically across the churn
+            eng.models.register("summarizer", DecodeModelSpec(
+                lora=LoRAAdapter(lora_init(jax.random.PRNGKey(42), base,
+                                           rank=8))))
+            print(f"hot-registered 'summarizer' (LoRA rank 8); models now: "
+                  f"{eng.models.list()}")
+        agents = eng.models.list()
         for ctx in ctxs.values():
             ctx.extend(rng.integers(4, 60, size=12))       # obs/delta
         t1 = time.time()
         outs = {(sid, a): ctx.generate(a, params=SamplingParams(
                     max_tokens=gen_len))
-                for sid, ctx in ctxs.items() for a in AGENTS}
+                for sid, ctx in ctxs.items() for a in agents}
         eng.run()                                          # drive to finish
         wall = time.time() - t1
         for (sid, a), out in outs.items():
@@ -69,8 +86,12 @@ def main():
             ttfts.append(out.ttft)
             itls.extend(out.inter_token_latencies())
         print(f"turn {turn}: {len(outs)} requests "
-              f"({n_sessions} sessions x {len(AGENTS)} agents), "
+              f"({n_sessions} sessions x {len(agents)} agents), "
               f"ctx {len(ctxs[0].tokens):4d} tok, wall {wall * 1e3:6.1f}ms")
+    # retire the hot-joined agent (drain=True lets in-flight work finish;
+    # nothing is in flight here, so it is gone on return)
+    eng.models.unregister("summarizer", drain=True)
+    assert "summarizer" not in eng.models
     for ctx in ctxs.values():
         ctx.close()
 
@@ -87,6 +108,8 @@ def main():
     print(f"decode: {s.decode_tokens} tokens in {s.decode_steps} batched "
           f"steps (mean batch {s.decode_batch_mean:.1f}), "
           f"{s.cow_page_copies} copy-on-write page clones")
+    print(f"model lifecycle: {s.model_churn_events} churn events, "
+          f"{s.plane_rebuilds} fused-plane relayouts at step boundaries")
     print(f"streaming: mean TTFT {1e3 * float(np.mean(ttfts)):.1f}ms, "
           f"p95 inter-token gap {1e3 * float(np.percentile(itls, 95)):.1f}ms")
     print("every agent decoded from the SAME shared base pages; in the "

@@ -7,19 +7,37 @@ If it holds accuracy, the decode pool stores ONE base copy + N tiny adapter
 sets — compounding the paper's memory argument (Eq. 9) on the weight side the
 way PrefillShare already compounds it on the KV side.
 
-Implementation: adapters target the attention projections (wq, wv, wo) and
-are materialized as ``W_eff = W + (alpha/r)·(A @ B)`` right before the decode
-forward — at serving time this merge happens once per model swap, so decode
-kernels are unchanged.
+Adapter trees mirror the base param tree: every targeted weight position
+holds a ``LoRAPair`` (a NamedTuple, hence a proper pytree node — gradients
+and optimizers traverse it transparently), every other position holds None.
+The pair is a DEDICATED type, not a bare ``{"A", "B"}`` dict: classification
+happens by position (a base LEAF pairs with whatever subtree the adapter
+tree holds there) and by ``isinstance``, so a real param subtree that merely
+happens to have keys A/B can never be mistaken for an adapter
+(tests/test_lora.py::test_real_param_subtree_named_a_b_is_not_an_adapter).
+
+Serving has two ways to consume adapters:
+  - ``lora_apply`` materializes ``W_eff = W + (alpha/r)·(A @ B)`` once (the
+    legacy per-model decode path);
+  - the fused decode plane stacks just the (tiny) A/B factors
+    (``stack_lora_params``) and performs the same merge INSIDE its jitted
+    vmapped step (serving/decode.py), so N adapter-factored decode modules
+    store one base copy + N adapter sets instead of N full models.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 DEFAULT_TARGETS = ("wq", "wv", "wo")
+
+
+class LoRAPair(NamedTuple):
+    """One adapter: ``delta = scale * A @ B``. NamedTuple => pytree node."""
+    A: Any
+    B: Any
 
 
 def _is_target(path, targets) -> bool:
@@ -38,27 +56,55 @@ def lora_init(key, base_params, *, rank: int = 8,
             ka = jax.random.fold_in(key, i)
             a = jax.random.normal(ka, (*batch, m, rank), jnp.float32) / rank
             b = jnp.zeros((*batch, rank, n), jnp.float32)
-            out.append({"A": a.astype(leaf.dtype), "B": b.astype(leaf.dtype)})
+            out.append(LoRAPair(a.astype(leaf.dtype), b.astype(leaf.dtype)))
         else:
             out.append(None)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _pair(ab):
+    """View ``ab`` as an adapter pair, else None. LoRAPair is the canonical
+    type; a bare two-key {"A", "B"} dict is still accepted here — at a base
+    LEAF position it is unambiguous (the base tree was already flattened, so
+    no base subtree can be swallowed by the check)."""
+    if isinstance(ab, LoRAPair):
+        return ab
+    if isinstance(ab, dict) and set(ab) == {"A", "B"}:
+        return LoRAPair(ab["A"], ab["B"])
+    return None
+
+
+def lora_delta(ab: LoRAPair, scale: float):
+    """The low-rank update ``scale * A @ B`` in float32."""
+    return jnp.einsum("...mr,...rn->...mn", ab.A.astype(jnp.float32),
+                      ab.B.astype(jnp.float32)) * scale
+
+
 def lora_apply(base_params, lora_params, *, alpha: float = 16.0,
                rank: int = 8):
-    """Materialize effective params: W + (alpha/rank) * A @ B."""
+    """Materialize effective params: W + (alpha/rank) * A @ B.
+
+    Adapter classification is positional: the merge pairs each base LEAF
+    with the adapter tree's subtree at the same position, and only a
+    ``LoRAPair`` there is treated as an adapter (None and any real param
+    structure pass through untouched). No ``is_leaf`` key-sniffing — the old
+    ``set(x) == {"A", "B"}`` heuristic could misclassify a genuine base
+    param subtree with those key names and crash (or silently corrupt) the
+    merge."""
     scale = alpha / rank
 
     def merge(w, ab):
-        if ab is None:
+        pair = _pair(ab)
+        if pair is None:
             return w
-        delta = jnp.einsum("...mr,...rn->...mn", ab["A"].astype(jnp.float32),
-                           ab["B"].astype(jnp.float32)) * scale
-        return (w.astype(jnp.float32) + delta).astype(w.dtype)
+        return (w.astype(jnp.float32) + lora_delta(pair, scale)).astype(w.dtype)
 
-    return jax.tree.map(merge, base_params, lora_params,
-                        is_leaf=lambda x: x is None or (
-                            isinstance(x, dict) and set(x) == {"A", "B"}))
+    # flatten_up_to semantics: base leaves drive; the adapter tree's whole
+    # subtree at each base-leaf position (LoRAPair or None) reaches merge.
+    leaves, treedef = jax.tree_util.tree_flatten(base_params)
+    ab_subtrees = treedef.flatten_up_to(lora_params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [merge(w, ab) for w, ab in zip(leaves, ab_subtrees)])
 
 
 def lora_param_count(lora_params) -> int:
@@ -81,16 +127,17 @@ def stack_lora_params(lora_list):
 
     Memory-lean variant of the fused plane for adapter-only decoders: stack
     just the (tiny) A/B factors and merge ``W + scale * A[m] @ B[m]`` inside
-    the vmapped step, instead of stacking N full materialized models."""
+    the vmapped step, instead of stacking N full materialized models. None
+    positions (untargeted weights) are empty pytree nodes and survive as-is;
+    adapter-target mismatches between the stacked models surface as a tree
+    structure error."""
     assert lora_list, "need at least one adapter pytree to stack"
-
-    def s(*xs):
-        if xs[0] is None:
-            assert all(x is None for x in xs), "adapter targets differ"
-            return None
-        return jnp.stack(xs)
-
-    return jax.tree.map(s, *lora_list, is_leaf=lambda x: x is None)
+    try:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *lora_list)
+    except ValueError as e:
+        raise ValueError(
+            f"cannot stack adapters: targeted-weight sets differ across the "
+            f"{len(lora_list)} models ({e})") from e
 
 
 def cache_conditioned_lora_loss(cfg, lora_params, base_params, prompt,

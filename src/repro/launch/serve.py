@@ -40,7 +40,9 @@ def run_engine(args):
     base = init_params(cfg, jax.random.PRNGKey(0))
     decs = {f"agent{i}": init_params(cfg, jax.random.PRNGKey(3 + i))
             for i in range(args.agents)}
-    eng = LocalDisaggEngine(cfg, base, decs, capacity=512)
+    eng = LocalDisaggEngine(cfg, base, capacity=512)
+    for mid, p in decs.items():
+        eng.models.register(mid, p)
     rng = np.random.default_rng(0)
     ctx = list(rng.integers(4, 60, size=32))
     for turn in range(args.turns):

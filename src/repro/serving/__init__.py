@@ -1,14 +1,17 @@
 from repro.serving.api import (FINISH_ABORT, FINISH_EOS, FINISH_LENGTH,
                                FINISH_STOP, RequestOutput, SamplingParams,
-                               SharedContext)
+                               SharedContext, UnknownModelError)
 from repro.serving.costmodel import CostModel
 from repro.serving.decode import FusedDecodePlane, StackedDecoders
+from repro.serving.registry import (DecodeModelSpec, LoRAAdapter,
+                                    ModelRegistry)
 from repro.serving.simulator import ServingConfig, Simulator
 from repro.serving.workload import PATTERNS, Session, make_sessions
 
 __all__ = [
     "FINISH_ABORT", "FINISH_EOS", "FINISH_LENGTH", "FINISH_STOP",
-    "RequestOutput", "SamplingParams", "SharedContext",
+    "RequestOutput", "SamplingParams", "SharedContext", "UnknownModelError",
     "CostModel", "FusedDecodePlane", "StackedDecoders",
+    "DecodeModelSpec", "LoRAAdapter", "ModelRegistry",
     "ServingConfig", "Simulator", "PATTERNS", "Session", "make_sessions",
 ]

@@ -26,6 +26,10 @@ Pieces:
   - ``engine.abort(request)``: cancels a request at ANY lifecycle stage
     (queued, mid-chunk, held under backpressure, decoding) and returns every
     page refcount to baseline.
+  - ``engine.models`` (``repro.serving.registry``): the decode-model set as
+    a live lifecycle surface — ``register``/``unregister`` while serving;
+    requests naming a model the registry does not serve raise the
+    first-class ``UnknownModelError`` defined here.
 
 The legacy ``submit``/``invoke``/``result`` surface survives as a thin
 deprecated shim over this API (asserted token-identical in tests/test_api.py).
@@ -42,6 +46,14 @@ FINISH_EOS = "eos"          # the request's eos_token_id was generated
 FINISH_STOP = "stop"        # a stop_token_ids member was generated
 FINISH_LENGTH = "length"    # max_tokens reached
 FINISH_ABORT = "abort"      # engine.abort() cancelled the request
+
+
+class UnknownModelError(KeyError):
+    """A request named a decode model the engine's ``ModelRegistry`` does not
+    currently serve — never registered, already unregistered, or draining
+    (unregister pending, accepting no new work). Raised by ``generate`` /
+    ``SharedContext.generate`` / the legacy ``submit`` shim BEFORE any pages
+    are touched, so a failed submission holds no engine state."""
 
 
 @dataclass(frozen=True)

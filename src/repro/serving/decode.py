@@ -8,12 +8,24 @@ LoRA merges alike), their param pytrees stack on a leading model axis
 (``core.lora.stack_params``), and one ``vmap`` over that axis advances EVERY
 active sequence of EVERY model in a single jitted forward per step.
 
+Weight layout per group (``DecodeModelSpec.group_key``):
+  - FULL specs stack complete param pytrees: every leaf is (M, ...).
+  - LORA specs stack ONLY the low-rank A/B factors (``stack_lora_params``);
+    the frozen base weights enter the step once, UNBATCHED, and each lane
+    merges ``W + scale * A[m] @ B[m]`` inside the jitted step right before
+    its forward — the decode plane stores one base copy + M adapter sets
+    instead of M materialized full models (Eq. 9 on the weight side), and
+    the merge is asserted bit-identical to pre-merged ``lora_apply``
+    decoders (tests/test_registry.py).
+
 Layout per step (``StackedDecoders.step``):
   - sequences are bucketed per model into an (M, Bmax) grid, padded with fake
     rows whose block tables point at the sentinel page 0 (never allocated, so
-    their garbage writes cannot alias live KV) — M stays constant across the
-    run (a model with zero active sequences keeps its lane), so lane count
-    never contributes retraces;
+    their garbage writes cannot alias live KV). M is the group's CURRENT
+    model count: the registry (serving/registry.py) rebuilds the plane at
+    step boundaries on churn, and every sequence's lane index is re-derived
+    from its model id per step, so hot (un)registration remaps lanes without
+    touching any live sequence's pages;
   - block-table width is bucketed to the next power of two, so jit retraces
     stop scaling with prompt length (growth by one page within a bucket
     reuses the trace);
@@ -43,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lora import stack_params
+from repro.core.lora import lora_apply, stack_lora_params, stack_params
 from repro.models import forward
 from repro.serving.sampling import sample_step
 
@@ -70,48 +82,91 @@ def sampling_arrays(seqs):
             jnp.asarray(seeds), greedy_only)
 
 
-def group_by_config(decoders):
-    """Partition ``{model_id: (cfg, params)}`` into fusable groups: models
-    sharing an identical ModelConfig stack into one StackedDecoders lane set;
-    each distinct config costs one dispatch per step."""
+def group_specs(specs):
+    """Partition ``{model_id: (cfg, DecodeModelSpec)}`` into fusable groups:
+    models sharing an identical ModelConfig AND weight-layout bucket
+    (``DecodeModelSpec.group_key``: all-full, or all-LoRA of one
+    (alpha, rank)) stack into one StackedDecoders lane set; each distinct
+    group costs one dispatch per step."""
     groups: dict = {}
-    for mid, (cfg, params) in decoders.items():
-        groups.setdefault(cfg, {})[mid] = params
+    for mid, (cfg, spec) in specs.items():
+        groups.setdefault((cfg, spec.group_key()), {})[mid] = spec
     return groups
 
 
 class StackedDecoders:
-    """All decode modules of ONE ModelConfig, stacked for the fused step."""
+    """All decode modules of ONE fusable group, stacked for the fused step."""
 
-    def __init__(self, cfg, decoders: dict, kvpool):
-        assert decoders, "need at least one decode module"
+    def __init__(self, cfg, members: dict, kvpool, base_params=None):
+        """``members``: {model_id: DecodeModelSpec}, all sharing ``cfg`` and
+        one ``group_key``. ``base_params`` (the engine's single frozen copy)
+        is required for LoRA groups — it is NOT copied: the stacked storage
+        is just the A/B factors."""
+        assert members, "need at least one decode module"
         self.cfg = cfg
         self.kvpool = kvpool
         self.page_size = kvpool.page_size
-        self.model_ids = sorted(decoders)            # stable model-axis order
+        self.model_ids = sorted(members)             # stable model-axis order
         self.index = {mid: m for m, mid in enumerate(self.model_ids)}
-        self.stacked = stack_params([decoders[mid] for mid in self.model_ids])
+        specs = [members[mid] for mid in self.model_ids]
+        self.lora = specs[0].kind == "lora"
+        if self.lora:
+            assert base_params is not None, "LoRA group needs the base copy"
+            ad = specs[0].lora
+            self.alpha, self.rank = ad.alpha, ad.rank
+            # one UNBATCHED base copy (shared with the engine — no new
+            # arrays) + M stacked adapter sets: the whole per-model storage
+            self.stacked = {"base": base_params,
+                            "ab": stack_lora_params(
+                                [s.lora.params for s in specs])}
+        else:
+            self.stacked = stack_params([s.full for s in specs])
         self.traces = 0                              # jit retraces (tests)
         self.dispatches = 0                          # jitted-step invocations
         self._step = self._build_step()
+
+    def param_bytes(self) -> int:
+        """Bytes of decode weights THIS group stores beyond the engine's
+        base copy: M × full-model bytes for full groups; the stacked A/B
+        factors only for LoRA groups (the base is aliased, not copied)."""
+        tree = self.stacked["ab"] if self.lora else self.stacked
+        return sum(x.nbytes for x in jax.tree.leaves(tree))
 
     # ------------------------------------------------------------------
     def _build_step(self):
         cfg, n_full, page = self.cfg, self.kvpool.n_full, self.page_size
         wire = self.kvpool.wire_decode_cache
+        if self.lora:
+            alpha, rank = self.alpha, self.rank
+            # vmap axes: base broadcast (None — every lane reads the ONE
+            # copy), adapters split on their stacked model axis
+            param_axes = {"base": None, "ab": 0}
+
+            def lane_params(packed):
+                # the Eq. 9 weight-side merge, INSIDE the jitted step: the
+                # lane's effective weights exist only as an intermediate of
+                # this trace, never as M materialized models in the pool
+                return lora_apply(packed["base"], packed["ab"],
+                                  alpha=alpha, rank=rank)
+        else:
+            param_axes = 0
+
+            def lane_params(packed):
+                return packed
 
         def fused(stacked, state, toks, pos, bts, seq_m, seq_b,
                   temps, top_ks, top_ps, seeds, greedy_only):
             # Python body runs once per trace: count retraces here.
             self.traces += 1
 
-            def lane(params, t, p, bt):
+            def lane(packed, t, p, bt):
                 cache = wire(state, bt, n_full)      # state: shared, unbatched
-                logits, new_cache, _ = forward(cfg, params, t[:, None],
-                                               cache=cache, pos=p)
+                logits, new_cache, _ = forward(cfg, lane_params(packed),
+                                               t[:, None], cache=cache, pos=p)
                 return logits, new_cache
 
-            lg_all, caches = jax.vmap(lane)(stacked, toks, pos, bts)
+            lg_all, caches = jax.vmap(lane, in_axes=(param_axes, 0, 0, 0))(
+                stacked, toks, pos, bts)
             # Each real sequence wrote exactly ONE row, at (page, slot) named
             # by its own block table — gather those rows out of the lane-local
             # pool copies and scatter them into the shared state. Pages are
@@ -190,23 +245,42 @@ class StackedDecoders:
 
 
 class FusedDecodePlane:
-    """Routes sequences to their config group's StackedDecoders: one jitted
-    dispatch per engine step per distinct decode ModelConfig (ONE total when
-    every decode module shares the engine's config — the paper's setting)."""
+    """Routes sequences to their group's StackedDecoders: one jitted dispatch
+    per engine step per distinct (ModelConfig, weight-layout) group — ONE
+    total when every decode module shares the engine's config and layout,
+    the paper's setting.
 
-    def __init__(self, decoders, kvpool):
-        """decoders: {model_id: (cfg, params)}."""
-        self.groups = [StackedDecoders(cfg, members, kvpool)
-                       for cfg, members in group_by_config(decoders).items()]
+    The plane is an immutable snapshot of the registry's model set: churn
+    (hot register/unregister) REPLACES it at a step boundary
+    (``LocalDisaggEngine._rebuild_decode_plane``), carrying the trace/
+    dispatch counters forward so stats stay cumulative across rebuilds."""
+
+    def __init__(self, specs, kvpool, base_params=None, *,
+                 traces0: int = 0, dispatches0: int = 0):
+        """specs: {model_id: (cfg, DecodeModelSpec)}."""
+        self.groups = [StackedDecoders(cfg, members, kvpool, base_params)
+                       for (cfg, _k), members in group_specs(specs).items()]
         self._group_of = {mid: g for g in self.groups for mid in g.model_ids}
+        self._traces0 = traces0
+        self._dispatches0 = dispatches0
+
+    @property
+    def model_ids(self) -> list:
+        return sorted(self._group_of)
 
     @property
     def traces(self) -> int:
-        return sum(g.traces for g in self.groups)
+        return self._traces0 + sum(g.traces for g in self.groups)
 
     @property
     def dispatches(self) -> int:
-        return sum(g.dispatches for g in self.groups)
+        return self._dispatches0 + sum(g.dispatches for g in self.groups)
+
+    def param_bytes(self) -> int:
+        """Decode-plane weight bytes beyond the engine's single base copy
+        (benchmarks/paged_decode_bench.py --adapters reports the N×full vs
+        base + N·adapter ratio from exactly this)."""
+        return sum(g.param_bytes() for g in self.groups)
 
     def step(self, seqs) -> np.ndarray:
         """One engine decode step; returns next tokens aligned with seqs."""

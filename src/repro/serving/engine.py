@@ -16,6 +16,16 @@ execute inside the jitted decode step; temperature=0 (the default) is the
 exact historical greedy graph. The legacy ``submit``/``invoke`` surface
 survives as a thin DeprecationWarning shim over the same internals.
 
+The decode-model set is a live lifecycle surface (``engine.models``, a
+``repro.serving.registry.ModelRegistry``): models hot-(un)register while the
+engine serves — new requests validate against the registry immediately
+(first-class ``UnknownModelError``), the fused plane relayouts at step
+boundaries with live sequences' lanes remapped bit-identically, and
+``unregister`` drains or aborts in-flight work per its ``drain`` flag.
+LoRA-spec'd models store one base copy + stacked adapter factors, merged
+inside the jitted step (serving/decode.py). A construction-time ``decoders``
+dict survives as a DeprecationWarning shim that registers each entry.
+
 The run loop is owned by the chunked-prefill scheduler
 (``repro.serving.scheduler``): with ``chunked=True`` each step packs one
 decode token per active sequence plus as many prefill chunks as fit a
@@ -77,6 +87,7 @@ from repro.serving.api import (FINISH_ABORT, FINISH_LENGTH, RequestOutput,
                                SamplingParams, SharedContext)
 from repro.serving.backpressure import ThroughputEWMA
 from repro.serving.decode import FusedDecodePlane, sampling_arrays
+from repro.serving.registry import ModelRegistry, as_spec
 from repro.serving.router import PrefillRouter
 from repro.serving.sampling import sample_step
 from repro.serving.scheduler import (ChunkedScheduler, Request,
@@ -128,6 +139,9 @@ class EngineStats:
     decode_steps: int = 0
     decode_tokens: int = 0
     decode_dispatches: int = 0    # jitted decode forwards issued
+    model_churn_events: int = 0   # accepted register/unregister mutations
+    plane_rebuilds: int = 0       # fused-plane relayouts applied at step
+                                  # boundaries (each re-jits the stacked step)
 
     @property
     def hit_ratio(self):
@@ -271,15 +285,28 @@ class DecodeWorker:
     Paged mode: ``step`` advances every assigned sequence by one token in a
     single batched forward (continuous batching over the shared pool).
     Dense mode: ``generate`` is the legacy B=1 loop over a private cache.
-    """
 
-    def __init__(self, cfg: ModelConfig, model_id: str, dec_params,
-                 expected_schema):
+    Weights come from a ``DecodeModelSpec`` and materialize LAZILY: a
+    LoRA-spec'd model only pays for full ``lora_apply`` params if one of the
+    per-model paths (``fused=False`` loop, dense fallback) actually runs it —
+    the fused plane reads the adapter factors straight from the registry and
+    never touches this copy."""
+
+    def __init__(self, cfg: ModelConfig, model_id: str, spec,
+                 expected_schema, base_params=None):
         self.cfg = cfg
         self.model_id = model_id
-        self.dec_params = dec_params
+        self.spec = as_spec(spec)
+        self.base_params = base_params
         self.expected_schema = expected_schema
+        self._dec_params = None
         self._step = None
+
+    @property
+    def dec_params(self):
+        if self._dec_params is None:
+            self._dec_params = self.spec.materialize(self.base_params)
+        return self._dec_params
 
     # ---- paged continuous batching ----
     def step(self, tokens, pos, cache, temps, top_ks, top_ps, seeds,
@@ -356,7 +383,7 @@ class LocalDisaggEngine:
     """Proxy + prefill worker pool + heterogeneous decode pool over one
     shared paged KV plane (Appendix B.1, upgraded to the §3.3 pipeline)."""
 
-    def __init__(self, cfg: ModelConfig, base_params, decoders: dict, *,
+    def __init__(self, cfg: ModelConfig, base_params, decoders: dict | None = None, *,
                  capacity: int = 512, paged: bool | None = None,
                  num_pages: int = 1024, page_size: int = 16,
                  n_prefill_workers: int = 1, router_policy: str = "pinned",
@@ -389,9 +416,6 @@ class LocalDisaggEngine:
                                    block_size=page_size, stats=self.stats)
                 for _ in range(n_prefill_workers)]
         self.prefill = self.prefill_workers[0]        # 1-worker convenience
-        self.decoders = {
-            mid: DecodeWorker(cfg, mid, params, self.schema)
-            for mid, params in decoders.items()}
         # fused cross-model decode (serving.decode): stack the decoder param
         # pytrees and advance every sequence of every model in ONE vmapped,
         # jitted forward per step. Default on the paged plane; fused=False
@@ -399,13 +423,30 @@ class LocalDisaggEngine:
         self.fused = self.paged if fused is None else fused
         assert not (self.fused and not self.paged), \
             "fused decode requires the paged data plane"
-        self.decode_plane = FusedDecodePlane(
-            {mid: (cfg, params) for mid, params in decoders.items()},
-            self.kvpool) if self.fused else None
         self.scheduler = ChunkedScheduler(
             self, SchedulerConfig(token_budget=token_budget,
                                   chunk_size=chunk_size,
                                   policy=sched_policy))
+        # model lifecycle: the decode-model set lives in the registry
+        # (engine.models) and is mutable while serving — register/unregister
+        # take effect for new requests immediately and relayout the fused
+        # plane at the next step boundary. ``decoders`` at construction is a
+        # deprecation shim that registers each entry as a full-weight spec.
+        self.decoders: dict[str, DecodeWorker] = {}
+        self.models = ModelRegistry(self)
+        self.decode_plane = None
+        if decoders:
+            warnings.warn(
+                "LocalDisaggEngine(..., decoders={...}) at construction is "
+                "deprecated; use engine.models.register(model_id, "
+                "DecodeModelSpec(full=...|lora=...)) — the model set is a "
+                "live lifecycle surface now", DeprecationWarning, stacklevel=2)
+            for mid, params in decoders.items():
+                self.models.register(mid, params)
+        if self.fused:
+            self._rebuild_decode_plane()
+        self.models._dirty = False
+        self.stats.model_churn_events = 0     # construction is not churn
         self._results: dict[int, np.ndarray] = {}
         self._fetched: set[int] = set()
         self._aborted: set[int] = set()
@@ -446,6 +487,53 @@ class LocalDisaggEngine:
         backlogs = [w.backlog_s + w.ewma.backlog_seconds(w.pending_chunk_tokens)
                     for w in self.prefill_workers]
         return self.prefill_workers[self.router.pick(sid, now, backlogs)]
+
+    # ------------------------------------------------------------------
+    # model lifecycle (driven by repro.serving.registry.ModelRegistry)
+    # ------------------------------------------------------------------
+    def _attach_decoder(self, model_id: str, spec) -> None:
+        """Registry hook: make ``model_id`` servable NOW (the per-model
+        DecodeWorker materializes its weights lazily; the fused plane picks
+        the model up at the next step boundary)."""
+        self.decoders[model_id] = DecodeWorker(self.cfg, model_id, spec,
+                                               self.schema, self.base_params)
+
+    def _detach_decoder(self, model_id: str) -> None:
+        self.decoders.pop(model_id, None)
+
+    def _rebuild_decode_plane(self) -> None:
+        """Relayout the fused plane to the registry's CURRENT model set.
+        Called at step boundaries only (``ModelRegistry.sync`` via the
+        scheduler; plus once at construction): sequences are addressed by
+        model id and every step re-derives lane indices from the new plane,
+        so live sequences keep decoding bit-identically — their pages,
+        positions, and sampling keys are untouched by the remap. Trace and
+        dispatch counters carry across rebuilds (stats stay cumulative)."""
+        if not self.fused:
+            return
+        old = self.decode_plane
+        self.decode_plane = FusedDecodePlane(
+            {mid: (self.cfg, spec)
+             for mid, spec in self.models._specs.items()},
+            self.kvpool, self.base_params,
+            traces0=old.traces if old is not None else 0,
+            dispatches0=old.dispatches if old is not None else 0)
+        if old is not None:
+            self.stats.plane_rebuilds += 1
+
+    def _has_inflight(self, model_id: str) -> bool:
+        """Any live work addressed to ``model_id`` (waiting / prefilling /
+        decoding)? Gates drain completion and plane-lane retirement."""
+        sched = self.scheduler
+        return (any(r.model_id == model_id for r in sched.waiting)
+                or any(r.model_id == model_id for r in sched.prefilling)
+                or any(s.model_id == model_id for s in sched.active))
+
+    def _inflight_rids(self, model_id: str) -> list[int]:
+        sched = self.scheduler
+        return ([r.rid for r in sched.waiting if r.model_id == model_id]
+                + [r.rid for r in sched.prefilling if r.model_id == model_id]
+                + [s.rid for s in sched.active if s.model_id == model_id])
 
     def _handoff_seq(self, block_table, n: int, sid: int, model_id: str,
                      params: SamplingParams, first_token: int,
@@ -511,6 +599,8 @@ class LocalDisaggEngine:
         a prefill-only request: the prompt becomes resident (and published
         for prefix reuse) but no decode sequence is created."""
         assert self.paged, "submit/run requires the paged data plane"
+        if model_id is not None:          # first-class, BEFORE any rid/pages
+            self.models.check_serving(model_id)
         rid = self._next_rid
         self._next_rid += 1
         params = self._resolve_seed(params, rid)
@@ -546,7 +636,8 @@ class LocalDisaggEngine:
         session (via ``ctx.generate``) to attach to a shared prefix.
         Iterate the handle / call ``result()`` to drive the engine, or drive
         it yourself with ``run()``/``step()``."""
-        params = SamplingParams() if params is None else params
+        self.models.check_serving(model_id)   # UnknownModelError before any
+        params = SamplingParams() if params is None else params   # state
         ephemeral = session is None
         sid = self._new_context_sid() if ephemeral else session
         if not self.paged:
@@ -832,6 +923,7 @@ class LocalDisaggEngine:
 
     def _invoke_dense(self, sid, context_tokens, model_id, params,
                       first_token):
+        self.models.check_serving(model_id)
         worker = self._pick_worker(sid)
         sc = worker.prefill(sid, context_tokens)
         dw = self.decoders[model_id]

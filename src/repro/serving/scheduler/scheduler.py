@@ -129,6 +129,12 @@ class ChunkedScheduler:
         token."""
         self.stats.steps += 1
         progress = self._reap_finished()
+        # step boundary: apply deferred model churn (finalize drained
+        # unregisters — the reap above may have retired a draining model's
+        # last sequence — and relayout the fused plane; live sequences'
+        # lane indices are re-derived from the new plane this same step, so
+        # surviving requests decode bit-identically across the churn)
+        self.engine.models.sync()
         progress += self._admit()
         budget = self.cfg.token_budget - len(self.active)
         chunks = self._plan_chunks(budget)

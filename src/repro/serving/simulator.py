@@ -65,6 +65,16 @@ class ServingConfig:
                                    # early finishes free decode batch slots
                                    # and HBM mid-flight. 0 = exact lengths
                                    # (the historical behaviour).
+    churn_interval_s: float = 0.0  # model-lifecycle churn (the engine's
+                                   # ModelRegistry): every interval a decode
+                                   # model hot-(un)registers mid-workload.
+                                   # 0 = static model set (historical).
+    churn_rebuild_s: float = 0.02  # registry-rebuild cost per churn event:
+                                   # the fused decode plane relayouts (and
+                                   # re-jits) at a step boundary, freezing
+                                   # every decode worker's progress for this
+                                   # long — fig3-style runs price churn with
+                                   # exactly this stall.
 
 
 @dataclass
@@ -148,9 +158,11 @@ class _DecodeWorker:
         return t * (1.0 + 3.0 * over)   # staging/reload inflation (B.2)
 
     def advance(self, now):
-        """Progress all active requests from last_t to now; return finished."""
+        """Progress all active requests from last_t to now; return finished.
+        ``last_t`` never moves backwards: a churn stall parks it in the
+        future, and advances inside the frozen window must not rewind it."""
         dt = now - self.last_t
-        self.last_t = now
+        self.last_t = max(self.last_t, now)
         finished = []
         if not self.active or dt <= 0:
             return finished
@@ -213,6 +225,10 @@ class Simulator:
         self.records: list[InvocationRecord] = []
         self.completed_sessions = []
         self.t_end = 0.0
+        self.churn_events = 0
+        self.churn_stall_s = 0.0
+        if scfg.churn_interval_s > 0:
+            self._push(scfg.churn_interval_s, "model_churn", None)
 
     # -- routing (paper §3.3 prefix-aware routing) ----------------------
     def route_prefill(self, st: _SessionState, model_id: int,
@@ -381,6 +397,33 @@ class Simulator:
         st, inv, rec = payload
         self._try_handoff(t, st, inv, rec)
 
+    # -- model-lifecycle churn -------------------------------------------
+    def _on_model_churn(self, t, _payload):
+        """One hot (un)register event: the decode plane's stacked layout is
+        rebuilt at a step boundary, which re-jits the fused step — modeled
+        as every decode worker's fluid progress freezing for
+        ``churn_rebuild_s`` (surviving sequences then resume bit-identically,
+        so ONLY the stall is priced, never lost tokens)."""
+        stall = self.scfg.churn_rebuild_s
+        self.churn_events += 1
+        for dw in self.decode:
+            finished = dw.advance(t)
+            for _rid, r in finished:
+                self._decode_finished(t, r)
+            if dw.active:
+                # progress is frozen during [t, t + stall): advance() clamps
+                # on dt <= 0, so the next decode_check simply sees no tokens
+                # generated across the rebuild window
+                dw.last_t = max(dw.last_t, t + stall)
+                self.churn_stall_s += stall
+                self._reschedule(t + stall, dw)
+        # keep churning only while the workload is live (sessions in flight,
+        # queued, or yet to arrive) — a recurring event on a drained
+        # simulator would spin the loop forever
+        if (self.states or self.admission_queue
+                or any(kind == "arrive" for _, _, kind, _ in self.events)):
+            self._push(t + self.scfg.churn_interval_s, "model_churn", None)
+
     def _on_decode_start(self, t, payload):
         wid, st, inv, rec = payload
         dw = self.decode[wid]
@@ -461,4 +504,6 @@ class Simulator:
             "staged_frac": float(np.mean([r.staged for r in recs])) if recs else 0.0,
             "early_stop_frac": float(np.mean(
                 [r.finish_reason == "eos" for r in recs])) if recs else 0.0,
+            "churn_events": self.churn_events,
+            "churn_stall_s": self.churn_stall_s,
         }

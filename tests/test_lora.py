@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.lora import (cache_conditioned_lora_loss, lora_apply,
-                             lora_init, lora_param_count, stack_lora_params,
-                             stack_params)
+from repro.core.lora import (LoRAPair, cache_conditioned_lora_loss,
+                             lora_apply, lora_init, lora_param_count,
+                             stack_lora_params, stack_params)
 from repro.models import init_params
 from repro.training import data as D
 from repro.training.optim import AdamW
@@ -29,6 +29,42 @@ def test_lora_init_targets_and_identity():
     merged = lora_apply(base, lora, rank=4)
     for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(merged)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_real_param_subtree_named_a_b_is_not_an_adapter():
+    """Regression: adapter pairs are a DEDICATED type (``LoRAPair``), not a
+    bare two-key dict — a genuine param subtree that happens to use keys
+    "A"/"B" must flow through lora_init/lora_apply untouched. The old
+    ``is_leaf: set(x) == {"A", "B"}`` heuristic swallowed such a base
+    subtree whole and crashed (or corrupted) the merge."""
+    key = jax.random.PRNGKey(0)
+    base = {
+        "wq": jax.random.normal(key, (8, 8)),
+        # a REAL parameter subtree whose keys collide with the old adapter
+        # encoding (e.g. a factored embedding named A/B)
+        "factored": {"A": jax.random.normal(jax.random.fold_in(key, 1), (8, 4)),
+                     "B": jax.random.normal(jax.random.fold_in(key, 2), (4, 8))},
+    }
+    lora = lora_init(jax.random.PRNGKey(1), base, rank=2, targets=("wq",))
+    # the collision subtree got NO adapters (its leaves are named A/B, not wq)
+    assert lora["factored"] == {"A": None, "B": None}
+    assert isinstance(lora["wq"], LoRAPair)
+    merged = lora_apply(base, lora, rank=2)           # must not misclassify
+    np.testing.assert_array_equal(np.asarray(merged["factored"]["A"]),
+                                  np.asarray(base["factored"]["A"]))
+    np.testing.assert_array_equal(np.asarray(merged["factored"]["B"]),
+                                  np.asarray(base["factored"]["B"]))
+    # B=0 at init -> wq is still the exact identity too
+    np.testing.assert_array_equal(np.asarray(merged["wq"]),
+                                  np.asarray(base["wq"]))
+    # and a nonzero adapter changes ONLY its target
+    hot = jax.tree_util.tree_map(
+        lambda x: x, lora, is_leaf=lambda x: x is None or isinstance(x, LoRAPair))
+    hot["wq"] = LoRAPair(lora["wq"].A, jnp.ones_like(lora["wq"].B))
+    merged2 = lora_apply(base, hot, rank=2)
+    assert not np.array_equal(np.asarray(merged2["wq"]), np.asarray(base["wq"]))
+    np.testing.assert_array_equal(np.asarray(merged2["factored"]["A"]),
+                                  np.asarray(base["factored"]["A"]))
 
 
 def test_stack_params_model_axis():

@@ -24,6 +24,22 @@ def test_all_sessions_complete():
         assert np.isfinite(r["p95_e2e_s"])
 
 
+def test_model_churn_scenario_completes_and_prices_stalls():
+    """Model-lifecycle churn (ServingConfig.churn_interval_s): a decode
+    model hot-(un)registers mid-workload and each event's registry-rebuild
+    cost freezes the decode plane. Work is conserved (all sessions finish),
+    stalls are accounted, and the churned run is never faster."""
+    quiet = _run("prefillshare")
+    churned = _run("prefillshare", churn_interval_s=1.0,
+                   churn_rebuild_s=0.05)
+    assert churned["sessions_done"] == quiet["sessions_done"] == 40
+    assert quiet["churn_events"] == 0 and quiet["churn_stall_s"] == 0.0
+    assert churned["churn_events"] > 0
+    assert churned["churn_stall_s"] > 0
+    assert churned["p95_e2e_s"] >= quiet["p95_e2e_s"] - 1e-9
+    assert churned["throughput_tok_s"] <= quiet["throughput_tok_s"] + 1e-6
+
+
 def test_prefillshare_beats_baseline_on_hit_ratio():
     rb = _run("baseline")
     rp = _run("prefillshare")

@@ -44,6 +44,39 @@ def test_conservation(mode, pattern, n_sessions, rate, max_conc):
 
 
 @settings(max_examples=8, deadline=None)
+@given(st.integers(6, 16), st.floats(1.0, 6.0),
+       st.floats(0.5, 4.0), st.floats(0.005, 0.1))
+def test_model_churn_conserves_work_and_prices_stalls(n_sessions, rate,
+                                                      churn_s, rebuild_s):
+    """Model-lifecycle churn (registry hot (un)register, rebuild cost
+    stalling the decode plane) never loses work: every session still
+    completes, stall accounting matches the event count, and the churned
+    run is no faster end-to-end than the identical churn-free run."""
+    runs = {}
+    for interval in (0.0, churn_s):
+        sessions = make_sessions("react", n_sessions=n_sessions,
+                                 arrival_rate=rate, seed=5)
+        sim = Simulator(CFG, ServingConfig(
+            mode="prefillshare", max_concurrent=64, chips_per_worker=2,
+            hbm_per_worker=32e9, churn_interval_s=interval,
+            churn_rebuild_s=rebuild_s), sessions)
+        runs[interval] = (sim.run(), sim)
+    quiet, churned = runs[0.0][0], runs[churn_s][0]
+    csim = runs[churn_s][1]
+    assert quiet["churn_events"] == 0 and quiet["churn_stall_s"] == 0.0
+    assert churned["sessions_done"] == n_sessions
+    assert churned["churn_events"] == csim.churn_events > 0
+    # every priced stall is one rebuild window on one busy decode worker
+    assert abs(churned["churn_stall_s"]
+               - csim.churn_stall_s) < 1e-9
+    assert churned["churn_stall_s"] <= (churned["churn_events"]
+                                        * rebuild_s * len(csim.decode) + 1e-9)
+    # churn only ever costs time (progress freezes, tokens are never lost)
+    assert churned["p95_e2e_s"] >= quiet["p95_e2e_s"] - 1e-6
+    assert all(not dw.active for dw in csim.decode)
+
+
+@settings(max_examples=8, deadline=None)
 @given(st.integers(4, 16), st.floats(1.0, 6.0))
 def test_prefillshare_never_worse_hit_ratio(n_sessions, rate):
     res = {}
