@@ -22,7 +22,16 @@ what a streaming client would observe (not an end-to-end proxy):
   - long prompts: TTFT p95 — the cost chunking pays, a long prompt's own
     first token arrives later because its prefill is sliced.
 
+A second A/B (``prefix_ab``) measures AUTOMATIC prefix caching: a fleet of
+independent requests repeating one long system prompt — no SharedContext,
+two prefill workers, hit-aware routing — run once with the engine-global
+radix tree on (the default) and once with ``prefix_cache=False``. Gates:
+token streams bit-identical, fleet hit tokens > 0.5x the shareable prefix
+tokens, and steady-stream p95 TTFT lower with the cache on (followers skip
+straight past the cached prefix to their first token).
+
 Usage: PYTHONPATH=src python -m benchmarks.chunked_prefill_bench
+       PYTHONPATH=src python benchmarks/chunked_prefill_bench.py --prefix-smoke
 """
 from __future__ import annotations
 
@@ -136,11 +145,120 @@ def main(chunk_size: int = 32, token_budget: int = 48, seed: int = 0):
     return rows, ratio
 
 
+# ----------------------------------------------------------------------
+# automatic prefix caching A/B
+
+PREFIX_LEN = 192          # shared system prompt (12 pages of 16)
+PREFIX_FLEET = 8          # independent requests repeating it
+PREFIX_GEN = 6
+
+
+def _prefix_workload(seed: int, prefix_len: int, fleet: int):
+    rng = np.random.default_rng(seed + 1)
+    shared = list(rng.integers(4, 60, size=prefix_len))
+    tails = [list(rng.integers(4, 60, size=12 + 2 * i)) for i in range(fleet)]
+    return shared, tails
+
+
+def _drive_prefix(eng: LocalDisaggEngine, shared, tails, gen: int):
+    """Publisher + steady follower stream; returns (streams, wall, ttfts).
+    Every request is a PLAIN generate — no SharedContext, no shared session:
+    reuse is purely the engine-global radix tree (or absent, cache off)."""
+    warm = eng.generate("m0", shared[:32] + tails[0][:4],
+                        SamplingParams(max_tokens=2))
+    eng.run()
+    assert warm.finished
+
+    pub = eng.generate("m0", shared + tails[0], SamplingParams(max_tokens=gen))
+    eng.run()                    # publisher commits the shared prefix (if on)
+
+    t_start = time.perf_counter()
+    outs = []
+    pending = list(tails[1:])
+    while eng.scheduler.has_work() or pending:
+        if pending:              # one arrival per step: a steady stream
+            outs.append(eng.generate("m0", shared + pending.pop(0),
+                                     SamplingParams(max_tokens=gen)))
+        eng.step()
+    wall = time.perf_counter() - t_start
+    assert all(o.finished for o in [pub] + outs)
+    streams = [list(o.tokens) for o in [pub] + outs]
+    return streams, wall, [o.ttft for o in outs]
+
+
+def prefix_ab(chunk_size: int = 32, token_budget: int = 64, seed: int = 0,
+              prefix_len: int = PREFIX_LEN, fleet: int = PREFIX_FLEET,
+              gen: int = PREFIX_GEN, gate_ttft: bool = True):
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    dec = init_params(CFG, jax.random.PRNGKey(7))
+    shared, tails = _prefix_workload(seed, prefix_len, fleet)
+
+    rows, all_streams = [], []
+    for mode, on in (("cache_on", True), ("cache_off", False)):
+        eng = LocalDisaggEngine(CFG, base, num_pages=512, page_size=16,
+                                chunked=True, chunk_size=chunk_size,
+                                token_budget=token_budget,
+                                n_prefill_workers=2,
+                                router_policy="prefix_aware",
+                                prefix_cache=on)
+        eng.models.register("m0", dec)
+        streams, wall, ttfts = _drive_prefix(eng, shared, tails, gen)
+        s = eng.stats()
+        rows.append({
+            "mode": mode,
+            "ttft_p95_ms": _pct(ttfts, 95),
+            "ttft_p50_ms": _pct(ttfts, 50),
+            "hit_tokens": s["prefix_hit_tokens"],
+            "hit_ratio": s["prefix_hit_ratio"],
+            "workers_hit": sum(w.mgr.stats.lookups > 0
+                               for w in eng.prefill_workers),
+            "tok_s": sum(len(st) for st in streams) / wall,
+        })
+        all_streams.append(streams)
+        if on:     # the fleet really spread over BOTH prefill workers
+            assert rows[-1]["workers_hit"] == 2, rows[-1]
+
+    cols = ["mode", "ttft_p95_ms", "ttft_p50_ms", "hit_tokens", "hit_ratio",
+            "workers_hit", "tok_s"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.2f}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+
+    on_row, off_row = rows
+    assert all_streams[0] == all_streams[1], \
+        "prefix cache changed tokens — reuse must be bit-identical"
+    shareable = (fleet - 1) * (prefix_len // 16) * 16
+    assert on_row["hit_tokens"] > 0.5 * shareable, \
+        (on_row["hit_tokens"], shareable)
+    assert off_row["hit_tokens"] == 0
+    speed = off_row["ttft_p95_ms"] / on_row["ttft_p95_ms"]
+    print(f"# repeated-prefix fleet ({fleet} requests x {prefix_len}-token "
+          f"shared prompt, 2 prefill workers, no SharedContext): "
+          f"{on_row['hit_tokens']} hit tokens "
+          f"(fleet hit ratio {on_row['hit_ratio']:.2f}), follower p95 TTFT "
+          f"{off_row['ttft_p95_ms']:.2f}ms off -> {on_row['ttft_p95_ms']:.2f}"
+          f"ms on ({speed:.2f}x lower), outputs bit-identical")
+    if gate_ttft:
+        assert speed > 1.0, (
+            f"prefix cache did not lower follower p95 TTFT ({speed:.2f}x)")
+    return rows, speed
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--budget", type=int, default=48)
+    ap.add_argument("--prefix-smoke", action="store_true",
+                    help="CI smoke: small prefix-cache A/B only (asserts "
+                         "hit ratio > 0 and bit-identical outputs; the TTFT "
+                         "gate is reserved for the full bench)")
     args = ap.parse_args()
+    if args.prefix_smoke:
+        rows, _ = prefix_ab(token_budget=args.budget + 16, prefix_len=96,
+                            fleet=4, gen=4, gate_ttft=False)
+        assert rows[0]["hit_ratio"] > 0.0
+        sys.exit(0)
     _, ratio = main(chunk_size=args.chunk, token_budget=args.budget)
     # the robust user-visible win on this workload: a stream arriving under
     # load reaches its FIRST token far sooner when long prompts are sliced
@@ -149,3 +267,4 @@ if __name__ == "__main__":
     # at scale, so TTFT is the gated metric)
     assert ratio > 1.0, (
         f"chunking did not lower steady-stream p95 TTFT (ratio {ratio:.2f}x)")
+    prefix_ab(chunk_size=args.chunk)

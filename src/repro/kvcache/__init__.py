@@ -1,6 +1,6 @@
 from repro.kvcache.blocks import BlockPool, PoolExhausted
 from repro.kvcache.handoff import HandoffChannel, HandoffPlan, SchemaMismatch
-from repro.kvcache.manager import (Allocation, CacheManager,
+from repro.kvcache.manager import (Allocation, CacheManager, CacheStats,
                                    kv_bytes_per_token, state_bytes_per_seq)
 from repro.kvcache.paged import PagedKVPool
-from repro.kvcache.radix import PrefixIndex
+from repro.kvcache.radix import NullPrefixIndex, PrefixIndex

@@ -47,14 +47,23 @@ class BlockPool:
     def add_evict_callback(self, cb):
         """Register an additional eviction listener.
 
-        A pool shared by several CacheManagers (one per prefill worker, each
-        with its own PrefixIndex) must notify EVERY index when a physical
-        page is reclaimed — any of them may hold a node for it."""
+        A pool shared by several CacheManagers must notify EVERY registered
+        index when a physical page is reclaimed — any of them may hold a
+        node for it. With the engine-global radix tree there is one shared
+        index (registered once, by the engine); per-manager private indexes
+        (simulator baseline mode) each register their own. Either way a
+        callback fires BEFORE the page re-enters the free list, so no index
+        can serve a match for a page whose KV is about to be overwritten."""
         self._evict_cbs.append(cb)
 
     @property
     def free_count(self) -> int:
         return len(self._free) + len(self._cached)
+
+    @property
+    def cached_count(self) -> int:
+        """Pages retained at refcount 0 for prefix reuse (LRU-evictable)."""
+        return len(self._cached)
 
     @property
     def active_count(self) -> int:

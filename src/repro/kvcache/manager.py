@@ -53,6 +53,18 @@ class CacheStats:
     def hit_ratio(self) -> float:
         return self.hit_tokens / self.total_tokens if self.total_tokens else 0.0
 
+    @classmethod
+    def merge(cls, stats) -> "CacheStats":
+        """Roll per-worker hit accounting up into ONE fleet-wide surface.
+        Engine (``engine.stats()``) and simulator (``summary()``) both report
+        through this, so 'hit ratio' means the same number everywhere."""
+        out = cls()
+        for s in stats:
+            out.lookups += s.lookups
+            out.hit_tokens += s.hit_tokens
+            out.total_tokens += s.total_tokens
+        return out
+
 
 @dataclass
 class Allocation:
@@ -68,19 +80,29 @@ class Allocation:
 
 class CacheManager:
     def __init__(self, cfg: ModelConfig, num_blocks: int, block_size: int = 16,
-                 *, pool: BlockPool | None = None):
+                 *, pool: BlockPool | None = None, index=None):
         """``pool``: optionally share one physical BlockPool across several
         managers (one per prefill worker). Block ids then index the SAME
         physical page arrays (PagedKVPool), so pages allocated by any worker
         are directly addressable by every decode worker — the zero-copy
-        handoff invariant. Each manager keeps its own PrefixIndex (prefix
-        locality stays per-worker, which is what the router trades off)."""
+        handoff invariant.
+
+        ``index``: optionally share one PrefixIndex across the managers on a
+        shared pool (the ENGINE-GLOBAL radix tree: any prompt matches the
+        longest prefix any worker published). The caller that created the
+        shared index owns wiring its ``remove_block`` into the pool's
+        eviction callbacks — exactly once, not once per manager. A manager
+        constructed without ``index`` keeps a private tree over its own pool
+        (the historical per-worker locality, still what the simulator's
+        baseline mode measures) and registers the callback itself."""
         self.cfg = cfg
         if pool is None:
             pool = BlockPool(num_blocks, block_size)
         self.pool = pool
-        self.index = PrefixIndex(self.pool.block_size)
-        self.pool.add_evict_callback(self.index.remove_block)
+        if index is None:
+            index = PrefixIndex(self.pool.block_size)
+            self.pool.add_evict_callback(index.remove_block)
+        self.index = index
         self.stats = CacheStats()
         self.bytes_per_block = kv_bytes_per_token(cfg) * self.pool.block_size
 

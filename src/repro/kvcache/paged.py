@@ -1,7 +1,10 @@
 """PagedKVPool: the physical KV data plane behind the paged control plane.
 
 ``BlockPool``/``PrefixIndex``/``CacheManager`` are the *control* plane —
-refcounts, LRU, prefix matching over abstract block ids. This module gives
+refcounts, LRU, prefix matching over abstract block ids (since the
+automatic-prefix-caching PR, ONE engine-global radix tree is the single
+source of prefix truth over these pages: a page published by any prefill
+worker is matchable by every other). This module gives
 those ids physical storage: per-layer K/V page arrays shaped
 ``(P, page_size, Hkv, head_dim)`` (stacked over the model's scanned layer
 groups), so a block id allocated by any prefill worker addresses real tensors

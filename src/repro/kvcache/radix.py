@@ -4,6 +4,20 @@ SGLang-RadixAttention-style prefix reuse at page granularity: each node owns
 one physical block and is keyed by that block's token content, chained from
 its parent (equivalent to vLLM's chained block hashing, but kept as an
 explicit tree so eviction can walk leaves first and subtree reuse is O(depth)).
+
+Deployment shapes:
+  - ENGINE-GLOBAL (the default since the automatic-prefix-caching PR): ONE
+    ``PrefixIndex`` instance is shared by every prefill worker's
+    ``CacheManager`` over the engine's shared ``BlockPool``, so any prompt —
+    no explicit SharedContext needed — starts its prefill at the longest
+    prefix ANY worker ever published. The pool's eviction callback removes
+    evicted blocks from the tree, so no manager can serve a stale match.
+  - per-manager (the simulator's baseline mode, and any manager constructed
+    without an explicit ``index=``): prefix locality stays private, which is
+    what baseline/PrefillShare comparisons measure.
+  - ``NullPrefixIndex``: the ``prefix_cache=False`` A/B escape hatch — every
+    lookup misses, nothing is published, outputs are bit-identical (prefix
+    reuse only ever skips recomputation of identical KV).
 """
 from __future__ import annotations
 
@@ -47,6 +61,22 @@ class PrefixIndex:
             blocks.append(child.block_id)
             node = child
         return blocks, len(blocks) * bs
+
+    def match_len(self, tokens) -> int:
+        """Length (in tokens) of the longest cached prefix of ``tokens``,
+        WITHOUT touching the LRU clock — a pure peek for routing/admission
+        pricing (the router consults every candidate worker; only the worker
+        that actually serves the request should refresh recency)."""
+        bs = self.block_size
+        node = self.root
+        n = 0
+        for i in range(0, len(tokens) - len(tokens) % bs, bs):
+            child = node.children.get(tuple(tokens[i:i + bs]))
+            if child is None:
+                break
+            n += bs
+            node = child
+        return n
 
     def insert(self, tokens, block_ids) -> int:
         """Register fully-filled blocks for ``tokens``; returns #new nodes.
@@ -106,3 +136,34 @@ class PrefixIndex:
             while p is not self.root:
                 assert p.block_id in self._by_block
                 p = p.parent
+
+
+class NullPrefixIndex:
+    """Prefix caching disabled (``prefix_cache=False``): the same interface,
+    but every match misses and nothing is ever published. Requests then
+    recompute their full prompt (minus the per-session fast paths), which is
+    the A/B baseline automatic prefix caching is measured against."""
+
+    def __init__(self, block_size: int = 0):
+        self.block_size = block_size
+
+    def match(self, tokens):
+        return [], 0
+
+    def match_len(self, tokens) -> int:
+        return 0
+
+    def insert(self, tokens, block_ids) -> int:
+        return 0
+
+    def remove_block(self, block_id: int) -> None:
+        pass
+
+    def lru_leaves(self, n: int) -> list:
+        return []
+
+    def __len__(self):
+        return 0
+
+    def check_invariants(self):
+        pass

@@ -34,6 +34,20 @@ pool pages via ``flash_prefill_paged`` — no dense gather); with the default
 eager mode ``submit`` prefills whole prompts synchronously (the historical
 behaviour, kept bit-identical) and the scheduler steps decode only.
 
+Automatic prefix caching (default-on): the per-worker radix indexes are ONE
+ENGINE-GLOBAL refcounted radix tree over the shared pool's pages, so EVERY
+request — no explicit ``SharedContext`` needed — starts its prefill at the
+longest prefix ANY worker ever published (system prompts, few-shot headers,
+multi-turn history dedup automatically, fleet-wide). The router can price
+the expected prefix-hit length alongside backlog (``prefix_aware`` policy),
+the chunked scheduler packs cached-history prefills ahead of cold long
+prompts (they finish in a chunk or two and reach decode immediately), and
+pool evictions notify the tree before a page re-enters the free list, so a
+stale prefix is never served. ``prefix_cache=False`` disables all of it for
+A/B: outputs are bit-identical either way (reuse only skips recomputation of
+identical KV); ``engine.stats()`` rolls the per-worker hit accounting into
+one fleet-wide surface.
+
 Data plane (pure global-attention archs, the paper's operating point):
   - prefill: the router picks a worker; its CacheManager matches the longest
     cached prefix (radix, page-granular) and allocates physical pages for the
@@ -80,8 +94,9 @@ from repro.core.prefillshare import (base_prefill, base_prefill_paged,
                                      cache_schema)
 from repro.kvcache.blocks import BlockPool, PoolExhausted
 from repro.kvcache.handoff import HandoffChannel, transfer_cache
-from repro.kvcache.manager import CacheManager
+from repro.kvcache.manager import CacheManager, CacheStats
 from repro.kvcache.paged import PagedKVPool
+from repro.kvcache.radix import NullPrefixIndex, PrefixIndex
 from repro.models import forward
 from repro.serving.api import (FINISH_ABORT, FINISH_LENGTH, RequestOutput,
                                SamplingParams, SharedContext)
@@ -142,6 +157,7 @@ class EngineStats:
     model_churn_events: int = 0   # accepted register/unregister mutations
     plane_rebuilds: int = 0       # fused-plane relayouts applied at step
                                   # boundaries (each re-jits the stacked step)
+    _engine: object = field(default=None, repr=False, compare=False)
 
     @property
     def hit_ratio(self):
@@ -152,24 +168,59 @@ class EngineStats:
     def decode_batch_mean(self):
         return self.decode_tokens / self.decode_steps if self.decode_steps else 0.0
 
+    def __call__(self) -> dict:
+        """ONE engine-wide stats surface (``engine.stats()``): the counter
+        fields above plus the per-worker ``CacheStats`` rolled up fleet-wide
+        (prefix-hit tokens / lookups / hit ratio via ``CacheStats.merge`` —
+        the same accounting path the simulator reports) and the pool's
+        eviction/occupancy counters. Benches and the simulator read this one
+        number instead of stitching per-manager fragments."""
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if not f.name.startswith("_")}
+        d["hit_ratio"] = self.hit_ratio
+        d["decode_batch_mean"] = self.decode_batch_mean
+        eng = self._engine
+        if eng is None:
+            return d
+        agg = CacheStats.merge(w.mgr.stats for w in eng.prefill_workers)
+        pools = ([eng.block_pool] if eng.block_pool is not None
+                 else [w.mgr.pool for w in eng.prefill_workers])
+        d.update(
+            prefix_hit_tokens=agg.hit_tokens,
+            prefix_total_tokens=agg.total_tokens,
+            prefix_lookups=agg.lookups,
+            prefix_hit_ratio=agg.hit_ratio,
+            evictions=sum(p.stats.evictions for p in pools),
+            pages_active=sum(p.active_count for p in pools),
+            pages_cached=sum(p.cached_count for p in pools),
+            prefix_nodes=(len(eng.prefix_index)
+                          if eng.prefix_index is not None
+                          else sum(len(w.mgr.index)
+                                   for w in eng.prefill_workers)),
+        )
+        return d
+
 
 # ======================================================================
 # Prefill workers
 
 
 class PrefillWorker:
-    """Paged prefill worker: frozen base model + per-worker CacheManager
-    (own radix index) over the engine's SHARED physical page pool."""
+    """Paged prefill worker: frozen base model + CacheManager over the
+    engine's SHARED physical page pool and (by default) the engine's
+    SHARED GLOBAL radix tree, so a prefix published by any worker is a hit
+    on every worker."""
 
     def __init__(self, wid: int, cfg: ModelConfig, base_params,
                  kvpool: PagedKVPool, block_pool: BlockPool,
-                 stats: EngineStats):
+                 stats: EngineStats, index=None):
         self.wid = wid
         self.cfg = cfg
         self.base_params = base_params
         self.kvpool = kvpool
         self.mgr = CacheManager(cfg, block_pool.num_blocks,
-                                block_pool.block_size, pool=block_pool)
+                                block_pool.block_size, pool=block_pool,
+                                index=index)
         self.sessions: dict[int, PagedSession] = {}
         self.stats = stats
         self.backlog_s = 0.0      # router load signal (estimated work issued)
@@ -224,13 +275,13 @@ class DensePrefillWorker:
 
     def __init__(self, cfg: ModelConfig, base_params, *, capacity: int = 512,
                  mgr_blocks: int = 4096, block_size: int = 16,
-                 stats: EngineStats | None = None):
+                 stats: EngineStats | None = None, index=None):
         self.cfg = cfg
         self.base_params = base_params
         self.schema = cache_schema(cfg, base_params, capacity)
         self.capacity = capacity
         self.sessions: dict[int, SessionCache] = {}
-        self.mgr = CacheManager(cfg, mgr_blocks, block_size)
+        self.mgr = CacheManager(cfg, mgr_blocks, block_size, index=index)
         self.stats = stats if stats is not None else EngineStats()
         self.backlog_s = 0.0
         self.last_decay_t = time.monotonic()
@@ -389,11 +440,11 @@ class LocalDisaggEngine:
                  n_prefill_workers: int = 1, router_policy: str = "pinned",
                  chunked: bool = False, token_budget: int = 256,
                  chunk_size: int = 64, sched_policy: str = "fcfs",
-                 fused: bool | None = None):
+                 fused: bool | None = None, prefix_cache: bool = True):
         self.cfg = cfg
         self.base_params = base_params
         self.page_size = page_size
-        self.stats = EngineStats()
+        self.stats = EngineStats(_engine=self)
         self.chunked = chunked
         self.paged = PagedKVPool.supports(cfg) if paged is None else paged
         if self.paged and not PagedKVPool.supports(cfg):
@@ -401,19 +452,39 @@ class LocalDisaggEngine:
         self.schema = cache_schema(cfg, base_params, capacity)
         self.handoff = HandoffChannel(cfg)
         self.router = PrefillRouter(n_prefill_workers, router_policy)
+        self.prefix_cache = prefix_cache
         if self.paged:
             self.block_pool = BlockPool(num_pages, page_size)
             self.kvpool = PagedKVPool(cfg, num_pages, page_size)
+            # automatic prefix caching: ONE engine-global radix tree over the
+            # shared pool, shared by every worker's CacheManager — its
+            # eviction callback is registered exactly once, here, and fans
+            # out to every manager by construction (they all serve matches
+            # from this same tree). prefix_cache=False keeps the A/B escape
+            # hatch: no cross-request reuse, bit-identical outputs.
+            if prefix_cache:
+                self.prefix_index = PrefixIndex(page_size)
+                self.block_pool.add_evict_callback(
+                    self.prefix_index.remove_block)
+            else:
+                self.prefix_index = NullPrefixIndex(page_size)
             self.prefill_workers = [
                 PrefillWorker(i, cfg, base_params, self.kvpool,
-                              self.block_pool, self.stats)
+                              self.block_pool, self.stats,
+                              index=self.prefix_index)
                 for i in range(n_prefill_workers)]
         else:
+            # dense fallback: per-worker private pools, so block ids are not
+            # comparable across workers — the radix tree stays per-manager
+            # (prefix_cache=False still disables it for A/B)
             self.block_pool = None
             self.kvpool = None
+            self.prefix_index = None
             self.prefill_workers = [
                 DensePrefillWorker(cfg, base_params, capacity=capacity,
-                                   block_size=page_size, stats=self.stats)
+                                   block_size=page_size, stats=self.stats,
+                                   index=None if prefix_cache
+                                   else NullPrefixIndex(page_size))
                 for _ in range(n_prefill_workers)]
         self.prefill = self.prefill_workers[0]        # 1-worker convenience
         # fused cross-model decode (serving.decode): stack the decoder param
@@ -468,7 +539,7 @@ class LocalDisaggEngine:
     BACKLOG_HALFLIFE_S = 0.25
 
     # ------------------------------------------------------------------
-    def _pick_worker(self, sid: int, now: float | None = None):
+    def _pick_worker(self, sid: int, tokens=None, now: float | None = None):
         # Prefill here is synchronous, so there is no literal queue; the
         # routing signal is recency-weighted issued work plus (in chunked
         # mode) the admitted-but-uncomputed chunk backlog, both priced at
@@ -486,7 +557,26 @@ class LocalDisaggEngine:
                 w.last_decay_t = now
         backlogs = [w.backlog_s + w.ewma.backlog_seconds(w.pending_chunk_tokens)
                     for w in self.prefill_workers]
-        return self.prefill_workers[self.router.pick(sid, now, backlogs)]
+        cold_s = None
+        if tokens is not None:
+            # expected prefix-hit pricing: the request's cost at a worker is
+            # only its COLD tokens — zero on a worker whose session already
+            # holds the exact context (fast path), prompt minus the longest
+            # radix match otherwise (under the engine-global tree the match
+            # is worker-independent; dense fallback keeps per-worker trees,
+            # where this term IS the locality signal). match_len is a pure
+            # peek: consulting candidates must not refresh LRU recency.
+            n = len(tokens)
+            cold_s = []
+            for w in self.prefill_workers:
+                sc = w.sessions.get(sid)
+                if sc is not None and getattr(sc, "tokens", None) == tokens:
+                    cold = 0
+                else:
+                    cold = n - w.mgr.index.match_len(tokens)
+                cold_s.append(w.ewma.backlog_seconds(cold))
+        return self.prefill_workers[
+            self.router.pick(sid, now, backlogs, cold_s)]
 
     # ------------------------------------------------------------------
     # model lifecycle (driven by repro.serving.registry.ModelRegistry)
@@ -612,7 +702,7 @@ class LocalDisaggEngine:
                 priority=priority, seq=self._next_seq, params=params))
             self._next_seq += 1
             return rid
-        worker = self._pick_worker(sid)
+        worker = self._pick_worker(sid, tokens)
         bt, n = worker.prefill(sid, tokens)
         if params.max_tokens == 0:
             self._finish_prefill_only(rid)
@@ -924,7 +1014,8 @@ class LocalDisaggEngine:
     def _invoke_dense(self, sid, context_tokens, model_id, params,
                       first_token):
         self.models.check_serving(model_id)
-        worker = self._pick_worker(sid)
+        worker = self._pick_worker(
+            sid, [int(t) for t in np.asarray(context_tokens)])
         sc = worker.prefill(sid, context_tokens)
         dw = self.decoders[model_id]
         HandoffChannel.check(self.schema, dw.expected_schema)

@@ -12,6 +12,16 @@ unspecified. Policies:
                  ``spill_threshold`` seconds, fall back to the least-loaded
                  worker (paying the one-time prefix recompute there, which
                  then seeds ITS cache). The "whenever possible" made precise.
+  prefix_aware — price the request's expected COLD work (prompt tokens minus
+                 the longest cached-prefix hit, in seconds at each worker's
+                 measured rate) alongside the backlog, and pick the worker
+                 minimizing expected completion time. A long prefix hit makes
+                 a request nearly free — the chunked scheduler skips the
+                 cached pages entirely — so a busy worker holding the prefix
+                 beats an idle cold one, and under the engine-global radix
+                 tree (hit length worker-independent) the policy degrades to
+                 least_loaded with a home-worker tie-break. PPD's "Not All
+                 Prefills Are Equal" observation, applied to routing.
 
 ``benchmarks`` comparison: tests/test_router.py asserts the qualitative
 ordering (spillover >= pinned throughput under skewed load, pinned >= others
@@ -19,7 +29,7 @@ on hit ratio).
 """
 from __future__ import annotations
 
-POLICIES = ("pinned", "least_loaded", "spillover")
+POLICIES = ("pinned", "least_loaded", "spillover", "prefix_aware")
 
 
 class PrefillRouter:
@@ -30,17 +40,28 @@ class PrefillRouter:
         self.policy = policy
         self.spill = spill_threshold_s
 
-    def pick(self, sid: int, now: float, backlogs) -> int:
+    def pick(self, sid: int, now: float, backlogs, cold_s=None) -> int:
         """backlogs: per-worker estimated seconds of queued work.
+        cold_s: per-worker estimated seconds to prefill THIS request's
+        uncached tokens there (None when the caller has no prefix estimate —
+        ``prefix_aware`` then falls back to pure backlog).
 
-        The engine prices this signal with a MEASURED per-worker s/token
+        The engine prices both signals with a MEASURED per-worker s/token
         EWMA (serving.backpressure.ThroughputEWMA) over both eager issued
         work and, in chunked mode, the admitted-but-uncomputed chunk
-        backlog — so spillover thresholds compare real seconds, not a
-        hardcoded per-token constant."""
+        backlog — so routing compares real seconds, not a hardcoded
+        per-token constant, and a request's cost shrinks with its expected
+        prefix-hit length."""
         home = sid % self.n
         if self.policy == "pinned":
             return home
+        if self.policy == "prefix_aware":
+            # expected completion time = queue wait + own cold prefill;
+            # ties (e.g. idle fleet, global tree => equal hit) stay home so
+            # per-session fast paths keep their locality
+            total = [backlogs[i] + (cold_s[i] if cold_s is not None else 0.0)
+                     for i in range(self.n)]
+            return min(range(self.n), key=lambda i: (total[i], i != home))
         least = min(range(self.n), key=lambda i: backlogs[i])
         if self.policy == "least_loaded":
             return least

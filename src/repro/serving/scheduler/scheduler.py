@@ -50,6 +50,10 @@ class SchedulerConfig:
     token_budget: int = 256      # per-step cap: decode tokens + chunk tokens
     chunk_size: int = 64         # max prefill tokens per request per step
     policy: str = "fcfs"         # fcfs | priority (queue.py)
+    cached_first: bool = True    # chunk-budget order: cached-history prefills
+                                 # before cold prompts within a priority class
+                                 # (PPD; see queue.py — schedule-only, token
+                                 # streams stay bit-identical)
 
     def __post_init__(self):
         assert self.token_budget > 0 and self.chunk_size > 0
@@ -91,6 +95,14 @@ class Request:
     @property
     def n(self) -> int:
         return len(self.tokens)
+
+    @property
+    def cached_tokens(self) -> int:
+        """Prompt tokens served from the prefix cache at admission — the
+        cached-history vs cold classification signal (queue.py)."""
+        if self.sibling_bt is not None:
+            return self.n
+        return self.alloc.cached_tokens if self.alloc is not None else 0
 
 
 class ChunkedScheduler:
@@ -160,7 +172,7 @@ class ChunkedScheduler:
                    for p in self.prefilling):
                 continue
             self.waiting.remove(r)
-            w = self.engine._pick_worker(r.sid)
+            w = self.engine._pick_worker(r.sid, r.tokens)
             r.worker = w
             sc = w.sessions.get(r.sid)
             if sc is not None and sc.tokens == r.tokens:
@@ -198,7 +210,12 @@ class ChunkedScheduler:
         pool = self.engine.block_pool
         pending = [r for r in self.prefilling
                    if r.done < r.n and r.sibling_bt is None]
-        for r in order_requests(pending, self.cfg.policy):
+        # cached-history prefills pack ahead of cold prompts (within a
+        # priority class): their remaining cold work is a chunk or two, so
+        # they reach decode immediately instead of queueing behind cold long
+        # prompts' many-step prefills (PPD classification, queue.py)
+        for r in order_requests(pending, self.cfg.policy,
+                                cached_first=self.cfg.cached_first):
             if budget <= 0:
                 break
             take = min(self.cfg.chunk_size, r.n - r.done, budget)

@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kvcache.handoff import HandoffChannel
-from repro.kvcache.manager import CacheManager, PoolExhausted, kv_bytes_per_token
+from repro.kvcache.manager import (CacheManager, CacheStats, PoolExhausted,
+                                   kv_bytes_per_token)
 from repro.serving.backpressure import B2Policy
 from repro.serving.costmodel import CostModel
 from repro.serving.router import PrefillRouter
@@ -487,8 +488,10 @@ class Simulator:
         ttft = [r.ttft for r in recs]
         total_gen = sum(r.gen_tokens for r in recs)
         makespan = self.t_end - min(s.arrival for s in self.sessions)
-        hits = sum(w.mgr.stats.hit_tokens for w in self.prefill)
-        tot = sum(w.mgr.stats.total_tokens for w in self.prefill)
+        # fleet-wide hit accounting through the SAME rollup the engine's
+        # ``stats()`` surface uses, so sim and engine report one number
+        agg = CacheStats.merge(w.mgr.stats for w in self.prefill)
+        hits, tot = agg.hit_tokens, agg.total_tokens
         return {
             "mode": self.scfg.mode,
             "sessions_done": len(sess),

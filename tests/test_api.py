@@ -384,6 +384,67 @@ def test_abort_while_decoding(params):
     assert eng.block_pool.active_count == 0
 
 
+def test_abort_cached_prefix_request_returns_baseline(params):
+    """Abort page accounting with the GLOBAL radix tree holding references:
+    a request whose prompt hit the automatic prefix cache refs shared cached
+    pages; aborting it mid-chunk or mid-decode returns the free-page count
+    exactly to the post-warm baseline, and the cached prefix stays servable."""
+    eng = _engine(params, chunked=True, chunk_size=5, token_budget=16)
+    prefix = _ctx(40, 4 * PAGE)
+    # warm: a PLAIN generate (no SharedContext) publishes the prefix in the
+    # engine-global tree; its ephemeral session auto-releases on finish
+    eng.generate("m0", prefix, SamplingParams(max_tokens=2)).result()
+    base = _free_baseline(eng)
+    assert eng.stats()["prefix_nodes"] >= 4
+
+    # (a) abort mid-chunk: cached-prefix refs return to the LRU cache, the
+    # partially-computed tail pages are dropped
+    victim = eng.generate("m0", prefix + _ctx(41, 12),
+                          SamplingParams(max_tokens=4))
+    eng.step()
+    r = next(r for r in eng.scheduler.prefilling
+             if r.rid == victim.request_id)
+    assert r.alloc.cached_tokens == 4 * PAGE   # hit with NO shared session
+    assert victim.abort() is True
+    assert eng.block_pool.free_count == base
+    eng.block_pool.check_invariants()
+
+    # (b) abort while decoding: handoff refs on the cached prefix unwind too
+    out = eng.generate("m0", prefix + _ctx(42, 5),
+                       SamplingParams(max_tokens=12))
+    while not out.tokens:
+        eng.step()
+    assert out.abort() is True
+    eng.run()
+    assert eng.block_pool.free_count == base
+    eng.block_pool.check_invariants()
+    assert eng.block_pool.active_count == 0
+
+    # (c) the aborts did not poison the tree: a fresh request still hits
+    out2 = eng.generate("m0", prefix + _ctx(43, 7),
+                        SamplingParams(max_tokens=3))
+    out2.result()
+    s = eng.stats()
+    assert s["prefix_hit_tokens"] >= 3 * 4 * PAGE    # (a), (b) and (c) hit
+    assert eng.block_pool.free_count == base
+    eng.block_pool.check_invariants()
+
+
+def test_abort_cached_prefix_eager_returns_baseline(params):
+    """Same baseline guarantee on the eager path: a decoding request whose
+    prefill fully reused the published prefix aborts back to baseline."""
+    eng = _engine(params)
+    prefix = _ctx(44, 3 * PAGE)
+    eng.generate("m0", prefix, SamplingParams(max_tokens=2)).result()
+    base = _free_baseline(eng)
+    out = eng.generate("m1", prefix, SamplingParams(max_tokens=12))
+    eng.step()
+    assert out.abort() is True
+    assert eng.block_pool.free_count == base
+    eng.block_pool.check_invariants()
+    assert eng.stats()["prefix_hit_tokens"] >= 3 * PAGE
+
+
 # ======================================================================
 # shared contexts
 

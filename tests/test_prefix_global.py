@@ -1,0 +1,247 @@
+"""Engine-global radix prefix cache: automatic cross-worker KV reuse with no
+SharedContext, multi-callback eviction fan-out, the ``prefix_cache=False``
+A/B escape hatch, and control-plane invariants under random interleavings."""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kvcache.blocks import BlockPool, PoolExhausted
+from repro.kvcache.radix import NullPrefixIndex, PrefixIndex
+from repro.models import init_params
+from repro.serving.api import SamplingParams
+from repro.serving.engine import LocalDisaggEngine
+
+CFG = ModelConfig(name="prefix-eng", arch_type="dense", n_layers=2,
+                  d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                  vocab_size=64, dtype="float32")
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    decs = {f"m{i}": init_params(CFG, jax.random.PRNGKey(10 + i))
+            for i in range(2)}
+    return base, decs
+
+
+def _engine(params, **kw):
+    base, decs = params
+    kw.setdefault("num_pages", 96)
+    kw.setdefault("page_size", PAGE)
+    return LocalDisaggEngine(CFG, base, decs, **kw)
+
+
+def _tok(seed, n):
+    return list(np.random.default_rng(seed).integers(4, 60, size=n))
+
+
+def _fleet(eng, prefix, n=6, max_tokens=3):
+    """n sequential plain generates (two models, NO SharedContext) sharing
+    ``prefix``; returns the token streams. Sequential so the first request
+    has published the prefix before the rest look it up (chunked mode
+    commits at promote)."""
+    streams = []
+    for i in range(n):
+        out = eng.generate(f"m{i % 2}", prefix + _tok(100 + i, 5 + i),
+                           SamplingParams(max_tokens=max_tokens))
+        streams.append(list(out.result()))
+    return streams
+
+
+# ======================================================================
+# tentpole headline: automatic cross-worker reuse, bit-identical to cache-off
+
+
+def test_automatic_cross_worker_reuse_bit_identical(params):
+    """Repeated-prefix workload over TWO prefill workers and two decode
+    models, no SharedContext anywhere: the engine-global tree serves >0.5x
+    the shareable prefix tokens, both workers get hits, and every token
+    stream is bit-identical to a prefix_cache=False run."""
+    kw = dict(chunked=True, chunk_size=2 * PAGE, token_budget=4 * PAGE,
+              n_prefill_workers=2)
+    prefix = _tok(0, 4 * PAGE)
+    n = 6
+
+    on = _engine(params, **kw)
+    got = _fleet(on, prefix, n=n)
+    s = on.stats()
+    shareable = (n - 1) * len(prefix)
+    assert s["prefix_hit_tokens"] > 0.5 * shareable, s
+    assert s["prefix_hit_ratio"] > 0.0
+    # ephemeral sids alternate pinned homes, so BOTH workers served traffic
+    # and hit the ONE shared tree (a per-worker tree would miss every other
+    # request here)
+    assert all(w.mgr.stats.lookups > 0 for w in on.prefill_workers)
+    assert sum(w.mgr.stats.hit_tokens > 0 for w in on.prefill_workers) == 2
+    on.block_pool.check_invariants()
+    on.prefix_index.check_invariants()
+    assert on.block_pool.active_count == 0    # ephemeral sessions all ended
+
+    off = _engine(params, **kw, prefix_cache=False)
+    ref = _fleet(off, prefix, n=n)
+    assert off.stats()["prefix_hit_tokens"] == 0
+    assert got == ref, "prefix reuse must never change tokens"
+    # and the cache genuinely skipped work: fewer pages ever allocated
+    assert on.block_pool.stats.allocs < off.block_pool.stats.allocs
+
+
+def test_eager_engine_automatic_reuse(params):
+    """The eager (non-chunked) path reuses through the same global tree."""
+    prefix = _tok(1, 3 * PAGE)
+    on = _engine(params, n_prefill_workers=2)
+    got = _fleet(on, prefix, n=4)
+    assert on.stats()["prefix_hit_tokens"] >= 3 * 3 * PAGE
+    ref = _fleet(_engine(params, n_prefill_workers=2, prefix_cache=False),
+                 prefix, n=4)
+    assert got == ref
+
+
+def test_plain_requests_hit_shared_context_prefix(params):
+    """SharedContext interaction: pages a SharedContext published are visible
+    to UNRELATED plain requests through the same global tree (the context
+    adds a residency guarantee on top, not a separate namespace)."""
+    eng = _engine(params, chunked=True, chunk_size=2 * PAGE,
+                  token_budget=4 * PAGE)
+    prefix = _tok(2, 3 * PAGE)
+    with eng.shared_context(prefix) as ctx:
+        assert len(ctx.tokens) == len(prefix)
+        out = eng.generate("m1", prefix + _tok(3, 6),
+                           SamplingParams(max_tokens=2))
+        out.result()
+    assert eng.stats()["prefix_hit_tokens"] >= 3 * PAGE
+    eng.block_pool.check_invariants()
+
+
+# ======================================================================
+# satellite: multi-callback eviction fan-out (control plane, no engine)
+
+
+def test_multi_callback_eviction_notifies_every_index():
+    """A pool with SEVERAL registered indexes must notify each of them when
+    a page is reclaimed — none may serve a stale match afterwards — and
+    refcounts return exactly to baseline."""
+    pool = BlockPool(8, 4)
+    ia, ib = PrefixIndex(4), PrefixIndex(4)
+    pool.add_evict_callback(ia.remove_block)
+    pool.add_evict_callback(ib.remove_block)
+
+    toks = list(range(16))                      # 4 full blocks
+    blocks = pool.alloc(4)
+    ia.insert(toks, blocks)
+    ib.insert(toks, blocks)
+    other = pool.alloc(4)                       # drain the free list
+    pool.unref(blocks)                          # ACTIVE -> CACHED, LRU head
+    pool.unref(other)
+    base = pool.free_count
+    assert base == 8
+
+    # evict ONE page: the LRU victim is the chain head, so remove_block's
+    # subtree semantics must clear the whole chain from BOTH indexes
+    head = pool.alloc(1)
+    assert pool.stats.evictions == 1
+    for idx in (ia, ib):
+        got, n = idx.match(toks)
+        assert (got, n) == ([], 0), "stale match after eviction"
+        assert len(idx) == 0
+        idx.check_invariants()
+
+    # churn every remaining cached page through a full eviction cycle
+    rest = pool.alloc(7)
+    assert pool.stats.evictions == 8
+    pool.unref(head)
+    pool.unref(rest)
+    assert pool.free_count == base              # refcounts to baseline
+    pool.check_invariants()
+
+
+def test_null_index_registers_nothing():
+    """NullPrefixIndex is inert end to end: misses, publishes nothing,
+    survives eviction callbacks."""
+    pool = BlockPool(4, 4)
+    null = NullPrefixIndex(4)
+    pool.add_evict_callback(null.remove_block)
+    blocks = pool.alloc(2)
+    assert null.insert(list(range(8)), blocks) == 0
+    assert null.match(list(range(8))) == ([], 0)
+    assert null.match_len(list(range(8))) == 0
+    assert len(null) == 0 and null.lru_leaves(4) == []
+    pool.unref(blocks)
+    pool.alloc(4)                               # evictions fire into null
+    null.check_invariants()
+    pool.check_invariants()
+
+
+def test_engine_eviction_no_stale_match(params):
+    """Under a pool small enough to force evictions, the global tree never
+    references a freed page and re-running an evicted prompt is still
+    bit-identical (it just re-prefills)."""
+    kw = dict(num_pages=14, chunked=True, chunk_size=2 * PAGE,
+              token_budget=4 * PAGE)
+    eng = _engine(params, **kw)
+    prompts = [_tok(50 + i, 3 * PAGE) for i in range(6)]
+    first = [list(eng.generate("m0", p, SamplingParams(max_tokens=2)).result())
+             for p in prompts]
+    assert eng.block_pool.stats.evictions > 0
+    eng.prefix_index.check_invariants()
+    # every page the tree still references is CACHED or ACTIVE, never free
+    for bid in eng.prefix_index._by_block:
+        assert (eng.block_pool.refcount(bid) > 0
+                or bid in eng.block_pool._cached)
+    again = [list(eng.generate("m0", p, SamplingParams(max_tokens=2)).result())
+             for p in prompts]
+    assert again == first
+    ref = _engine(params, **kw, prefix_cache=False)
+    assert [list(ref.generate("m0", p, SamplingParams(max_tokens=2)).result())
+            for p in prompts] == first
+    eng.block_pool.check_invariants()
+
+
+# ======================================================================
+# satellite: seeded-random interleaving invariants (always runs; the
+# hypothesis variant in test_radix_properties.py goes deeper when available)
+
+
+def test_random_interleaving_pool_index_invariants():
+    """500 random insert/match+ref/release/lru_leaves steps against a shared
+    pool+index: invariants hold throughout and match never returns a page
+    that an eviction callback removed."""
+    rng = random.Random(0)
+    pool = BlockPool(32, 4)
+    idx = PrefixIndex(4)
+    evicted: set[int] = set()
+
+    def on_evict(bid):
+        evicted.add(bid)
+        idx.remove_block(bid)
+
+    pool.add_evict_callback(on_evict)
+    live: list[list[int]] = []
+    for step in range(500):
+        op = rng.random()
+        if op < 0.45:
+            toks = [rng.randrange(3) for _ in range(rng.randint(1, 24))]
+            got, n = idx.match(toks)
+            assert n == 4 * len(got) <= len(toks)
+            assert not (set(got) & evicted), "matched an evicted page"
+            pool.ref(got)                       # a hit refs before alloc
+            need = -(-len(toks) // 4) - len(got)
+            try:
+                new = pool.alloc(need)
+            except PoolExhausted:
+                pool.unref(got)
+                continue
+            evicted -= set(new)                 # recycled ids are live again
+            idx.insert(toks, got + new)
+            live.append(got + new)
+        elif op < 0.85 and live:
+            pool.unref(live.pop(rng.randrange(len(live))))
+        else:
+            for bid in idx.lru_leaves(rng.randint(0, 4)):
+                assert bid not in evicted
+        idx.check_invariants()
+        pool.check_invariants()
+    assert pool.stats.evictions > 0, "workload never exercised eviction"

@@ -1,0 +1,108 @@
+"""Property tests for ``PrefixIndex``: random interleavings of
+insert/match/remove_block/lru_leaves hold ``check_invariants()`` and never
+surface an evicted block id.
+
+Runs only where hypothesis is installed (it is an optional dev dependency,
+not shipped in the serving image); tests/test_prefix_global.py carries a
+seeded-random variant of the same interleaving that always runs.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests only")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kvcache.radix import PrefixIndex  # noqa: E402
+
+BS = 4
+
+_tokens = st.lists(st.integers(0, 2), min_size=0, max_size=6 * BS)
+_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("insert"), _tokens),
+        st.tuples(st.just("match"), _tokens),
+        st.tuples(st.just("remove"), st.integers(1, 80)),
+        st.tuples(st.just("lru"), st.integers(0, 8)),
+    ),
+    max_size=80,
+)
+
+
+def _subtree_bids(node):
+    out, stack = [], [node]
+    while stack:
+        n = stack.pop()
+        out.append(n.block_id)
+        stack.extend(n.children.values())
+    return out
+
+
+@settings(max_examples=80, deadline=None)
+@given(_ops)
+def test_random_interleavings_hold_invariants(ops):
+    """Model-based check: a dict of token-chain -> block id mirrors the tree
+    exactly (insert is first-writer-wins; remove_block drops the whole
+    subtree), so match results are predicted, never stale, and
+    check_invariants() holds after every operation."""
+    idx = PrefixIndex(BS)
+    chains: dict[tuple, int] = {}     # full token-prefix -> owning block id
+    evicted: set[int] = set()
+    next_bid = 1
+
+    for op, arg in ops:
+        if op == "insert":
+            toks = arg
+            nb = len(toks) // BS
+            bids = list(range(next_bid, next_bid + nb))
+            next_bid += nb
+            idx.insert(toks, bids)
+            for i, bid in enumerate(bids):
+                # first registration of a chain wins; later inserts of the
+                # same content reuse the existing node
+                chains.setdefault(tuple(toks[:(i + 1) * BS]), bid)
+        elif op == "match":
+            got, n = idx.match(arg)
+            assert n == BS * len(got) <= len(arg)
+            assert not (set(got) & evicted), "matched an evicted block"
+            # the model predicts the exact chain
+            want = []
+            for i in range(len(arg) // BS):
+                bid = chains.get(tuple(arg[:(i + 1) * BS]))
+                if bid is None:
+                    break
+                want.append(bid)
+            assert got == want
+        elif op == "remove":
+            node = idx._by_block.get(arg)
+            doomed = set(_subtree_bids(node)) if node is not None else set()
+            idx.remove_block(arg)
+            evicted |= doomed
+            chains = {k: v for k, v in chains.items() if v not in doomed}
+            assert all(b not in idx._by_block for b in doomed)
+        else:  # lru
+            leaves = idx.lru_leaves(arg)
+            assert len(leaves) <= arg
+            assert not (set(leaves) & evicted)
+            assert all(idx._by_block[b].is_leaf for b in leaves)
+        idx.check_invariants()
+        assert len(idx) == len(chains)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_tokens, _tokens)
+def test_match_is_longest_common_block_prefix(a, b):
+    """After inserting two sequences, matching either returns a chain whose
+    length is at least their shared full-block prefix."""
+    idx = PrefixIndex(BS)
+    idx.insert(a, list(range(1, 1 + len(a) // BS)))
+    idx.insert(b, list(range(100, 100 + len(b) // BS)))
+    common = 0
+    for i in range(min(len(a), len(b)) // BS):
+        if a[i * BS:(i + 1) * BS] != b[i * BS:(i + 1) * BS]:
+            break
+        common += BS
+    for seq in (a, b):
+        _, n = idx.match(seq)
+        assert n == (len(seq) // BS) * BS   # own sequence always fully hits
+        assert n >= common
+    idx.check_invariants()
