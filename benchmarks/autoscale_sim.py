@@ -1,0 +1,183 @@
+"""Diurnal autoscale scenario: elastic prefill:decode split vs every static.
+
+The workload flips regime mid-run (serving/workload.py DIURNAL_PHASES):
+
+  phase A — "daytime" ingest burst: single-turn sessions with ~4k-token cold
+            prompts and 16-token answers arriving at 8x the base rate.
+            Prefill queueing dominates TTFT; generated KV drains instantly,
+            so decode is never the constraint — every worker parked on
+            decode is wasted.
+  phase B — "evening" chat: 3-turn sessions, 48-token deltas, 512-token
+            generations. Prompt work is trivial but accumulated multi-turn
+            KV saturates decode HBM, so TTFT degrades through deferred
+            handoffs (B.2 backpressure) unless decode holds the workers.
+
+No static split is right for both phases — that is the point. The
+autoscaler (serving/autoscale.py) starts at the neutral 4:4 and must
+discover the schedule from its signals alone: it shifts workers toward
+prefill when the phase-A backlog builds, and back toward decode in phase B
+*proactively*, on declining KV headroom (free_page_frac), before the first
+deferral lands. The gate asserts the autoscaled run's pooled p95 TTFT beats
+EVERY static split of the same 8-worker fleet.
+
+The pooled p95 is an honest diurnal metric here: phase A's tail punishes
+decode-heavy statics (2:6 drowns in prefill queueing) while phase B's tail
+punishes prefill-heavy ones (5:3+ avalanches into handoff deferral), so a
+static split can win one phase only by losing the other.
+
+Usage: PYTHONPATH=src python benchmarks/autoscale_sim.py          # full sweep
+       PYTHONPATH=src python benchmarks/autoscale_sim.py --smoke  # CI, <60 s
+       PYTHONPATH=src python benchmarks/autoscale_sim.py --prom-lint
+       ... [--json PATH]   # write BENCH_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+try:                       # script: python benchmarks/autoscale_sim.py
+    from bench_json import gate, write_bench_json
+except ImportError:        # module: python -m benchmarks.autoscale_sim
+    from benchmarks.bench_json import gate, write_bench_json
+from repro.configs.base import get_config
+from repro.serving.autoscale import AutoscaleConfig
+from repro.serving.simulator import ServingConfig, Simulator
+from repro.serving.workload import make_diurnal_sessions
+
+CFG = get_config("internlm2-1.8b")
+
+TOTAL = 8                  # fixed fleet: n_prefill + n_decode
+N_SESSIONS = 60            # 30 per phase
+RATE = 5.0                 # base Poisson session arrival rate (1/s)
+GAP_S = 8.0                # drain gap between the phases (regime boundary)
+
+# Frozen control-loop tuning for the gate. The bounds exclude the 1:7/7:1
+# corners (both phases' p95 there are bistable deferral cliffs), and
+# free_page_low=0.35 is the proactive mark: decode HBM headroom declines
+# for seconds before the first deferral, so shifting at 35% free completes
+# the migration while handoffs still flow.
+AUTOSCALE = AutoscaleConfig(
+    min_prefill=2, max_prefill=6, min_decode=2, max_decode=6,
+    decode_slots=24, total_budget=TOTAL, interval_s=0.25,
+    cooldown_intervals=0, ttft_target_s=None,
+    backlog_high_s=0.45, backlog_low_s=0.01, free_page_low=0.35)
+
+
+def run_split(n_pre: int, n_dec: int, *, seed: int = 0,
+              autoscale: AutoscaleConfig | None = None) -> dict:
+    sessions = make_diurnal_sessions(n_sessions=N_SESSIONS, arrival_rate=RATE,
+                                     seed=seed, phase_gap_s=GAP_S)
+    sc = ServingConfig(mode="prefillshare", n_prefill_workers=n_pre,
+                       n_decode_workers=n_dec, max_concurrent=96,
+                       chips_per_worker=1, hbm_per_worker=8e9,
+                       b2_policy="backpressure", prefill_chunk_tokens=256,
+                       max_decode_batch=16, autoscale=autoscale)
+    sim = Simulator(CFG, sc, sessions)
+    r = sim.run()
+    recs = [x for x in sim.records if x.done > 0]
+    half = N_SESSIONS // 2
+    a = [x.ttft for x in recs if x.sid < half]
+    b = [x.ttft for x in recs if x.sid >= half]
+    return {
+        "split": f"{n_pre}:{n_dec}",
+        "autoscaled": autoscale is not None,
+        "p95_ttft_s": round(r["p95_ttft_s"], 4),
+        "phase_a_p95_ttft_s": round(float(np.percentile(a, 95)), 4),
+        "phase_b_p95_ttft_s": round(float(np.percentile(b, 95)), 4),
+        "p95_e2e_s": round(r["p95_e2e_s"], 3),
+        "tok_s": round(r["throughput_tok_s"], 1),
+        "resizes": r["resize_events"],
+        "final_split": (f"{r['final_prefill_workers']}:"
+                        f"{r['final_decode_workers']}"),
+    }
+
+
+def main(smoke: bool = False, seed: int = 0, json_path: str | None = None):
+    # smoke trims the sweep to the competitive statics (the corners lose by
+    # an order of magnitude; the full run shows them) to stay under the CI
+    # 60 s budget
+    prefills = range(2, 6) if smoke else range(1, TOTAL)
+    rows = [run_split(p, TOTAL - p, seed=seed) for p in prefills]
+    auto = run_split(4, 4, seed=seed, autoscale=AUTOSCALE)
+    rows.append(auto)
+
+    cols = ["split", "p95_ttft_s", "phase_a_p95_ttft_s", "phase_b_p95_ttft_s",
+            "p95_e2e_s", "tok_s", "resizes", "final_split"]
+    print(",".join(cols))
+    for r in rows:
+        tag = "auto " + r["split"] if r["autoscaled"] else "     " + r["split"]
+        print(",".join([tag] + [str(r[c]) for c in cols[1:]]))
+
+    statics = [r for r in rows if not r["autoscaled"]]
+    best = min(statics, key=lambda r: r["p95_ttft_s"])
+    margin = best["p95_ttft_s"] / auto["p95_ttft_s"]
+    print(f"# autoscale p95 TTFT {auto['p95_ttft_s']:.3f}s vs best static "
+          f"{best['split']} {best['p95_ttft_s']:.3f}s ({margin:.2f}x lower; "
+          f"{auto['resizes']} resizes, 4:4 start -> {auto['final_split']}) — "
+          f"phase A favors prefill, phase B decode, and only the elastic "
+          f"split serves both tails")
+    if json_path:
+        write_bench_json(json_path, "autoscale_sim", rows, gates={
+            "autoscale_beats_best_static_p95_ttft": gate(
+                margin, 1.0, higher_is_better=True)})
+    assert auto["p95_ttft_s"] < best["p95_ttft_s"], (
+        f"autoscale p95 TTFT {auto['p95_ttft_s']:.3f}s did not beat best "
+        f"static {best['split']} at {best['p95_ttft_s']:.3f}s")
+    return rows, margin
+
+
+def prom_lint():
+    """Scrape a real engine's ``render_prometheus()`` through the format
+    lint: a tiny model serves a few requests so every registry family
+    (counters, gauges, TTFT/ITL histograms, traces) is populated, then the
+    exposition text must lint clean and carry the core series."""
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import init_params
+    from repro.serving.api import SamplingParams
+    from repro.serving.engine import LocalDisaggEngine
+    from repro.serving.metrics import lint_prometheus
+
+    cfg = ModelConfig(name="prom-lint", arch_type="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=64, dtype="float32")
+    eng = LocalDisaggEngine(cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                            num_pages=128, page_size=16)
+    eng.models.register("m0", init_params(cfg, jax.random.PRNGKey(7)))
+    rng = np.random.default_rng(0)
+    outs = [eng.generate("m0", list(rng.integers(4, 60, size=24 + i)),
+                        SamplingParams(max_tokens=8)) for i in range(3)]
+    eng.run()
+    assert all(o.finished for o in outs)
+
+    text = eng.render_prometheus()
+    problems = lint_prometheus(text)
+    assert not problems, "\n".join(problems)
+    for series in ("engine_ttft_seconds", "engine_itl_seconds",
+                   "engine_decode_tokens_total", "engine_pool_free_pages"):
+        assert series in text, f"missing core series {series!r}"
+    n_series = sum(1 for ln in text.splitlines()
+                   if ln and not ln.startswith("#"))
+    print(f"# prometheus lint clean: {n_series} samples, "
+          f"{text.count('# TYPE')} families")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: competitive statics only, <60 s")
+    ap.add_argument("--prom-lint", action="store_true",
+                    help="lint a real engine's Prometheus exposition")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serving.json here")
+    args = ap.parse_args()
+    if args.prom_lint:
+        prom_lint()
+        sys.exit(0)
+    main(smoke=args.smoke, seed=args.seed, json_path=args.json)

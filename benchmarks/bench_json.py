@@ -1,0 +1,51 @@
+"""Shared ``BENCH_serving.json`` writer for the serving benchmarks.
+
+Every serving bench (`chunked_prefill_bench`, `paged_decode_bench`,
+`autoscale_sim`) accepts ``--json PATH`` and writes one document in this
+schema, so successive runs accumulate a comparable bench trajectory and CI
+can upload the file as an artifact:
+
+    {
+      "schema": "BENCH_serving/v1",
+      "bench":  "<bench name>",
+      "unix_time": <int seconds>,
+      "rows":  [ {<mode/path label>, tok_s, *_ms | *_s percentiles,
+                  hit_ratio, ...}, ... ],
+      "gates": { "<gate name>": {"value": float, "threshold": float,
+                 "passed": bool}, ... }
+    }
+
+Rows are the bench's printed table verbatim (one dict per configuration);
+gates are the assertions the bench enforces, recorded with the measured
+value so a regression's margin is visible in the artifact history, not just
+pass/fail.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+SCHEMA = "BENCH_serving/v1"
+
+
+def gate(value: float, threshold: float, *, higher_is_better: bool = True):
+    """One recorded assertion: the measured value vs its gate threshold."""
+    passed = value > threshold if higher_is_better else value < threshold
+    return {"value": float(value), "threshold": float(threshold),
+            "higher_is_better": higher_is_better, "passed": bool(passed)}
+
+
+def write_bench_json(path: str, bench: str, rows: list,
+                     gates: dict | None = None) -> dict:
+    doc = {
+        "schema": SCHEMA,
+        "bench": bench,
+        "unix_time": int(time.time()),
+        "rows": rows,
+        "gates": gates or {},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} ({SCHEMA}, bench={bench}, {len(rows)} rows)")
+    return doc

@@ -32,6 +32,7 @@ straight past the cached prefix to their first token).
 
 Usage: PYTHONPATH=src python -m benchmarks.chunked_prefill_bench
        PYTHONPATH=src python benchmarks/chunked_prefill_bench.py --prefix-smoke
+       ... [--json PATH]   # write BENCH_serving.json (see bench_json.py)
 """
 from __future__ import annotations
 
@@ -40,6 +41,11 @@ import sys
 import time
 
 sys.path.insert(0, "src")
+
+try:
+    from bench_json import gate, write_bench_json
+except ImportError:
+    from benchmarks.bench_json import gate, write_bench_json
 
 import jax
 import numpy as np
@@ -253,13 +259,27 @@ if __name__ == "__main__":
                     help="CI smoke: small prefix-cache A/B only (asserts "
                          "hit ratio > 0 and bit-identical outputs; the TTFT "
                          "gate is reserved for the full bench)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serving.json here")
     args = ap.parse_args()
     if args.prefix_smoke:
         rows, _ = prefix_ab(token_budget=args.budget + 16, prefix_len=96,
                             fleet=4, gen=4, gate_ttft=False)
+        if args.json:
+            write_bench_json(args.json, "chunked_prefill_prefix_smoke", rows,
+                             gates={"fleet_hit_ratio": gate(
+                                 rows[0]["hit_ratio"], 0.0)})
         assert rows[0]["hit_ratio"] > 0.0
         sys.exit(0)
-    _, ratio = main(chunk_size=args.chunk, token_budget=args.budget)
+    rows, ratio = main(chunk_size=args.chunk, token_budget=args.budget)
+    prefix_rows, speed = prefix_ab(chunk_size=args.chunk)
+    if args.json:
+        write_bench_json(args.json, "chunked_prefill", rows + prefix_rows,
+                         gates={
+                             "steady_ttft_p95_eager_over_chunked": gate(
+                                 ratio, 1.0),
+                             "follower_ttft_p95_off_over_on": gate(
+                                 speed, 1.0)})
     # the robust user-visible win on this workload: a stream arriving under
     # load reaches its FIRST token far sooner when long prompts are sliced
     # (ITL percentiles are reported above; on toy CPU models the per-chunk
@@ -267,4 +287,3 @@ if __name__ == "__main__":
     # at scale, so TTFT is the gated metric)
     assert ratio > 1.0, (
         f"chunking did not lower steady-stream p95 TTFT (ratio {ratio:.2f}x)")
-    prefix_ab(chunk_size=args.chunk)

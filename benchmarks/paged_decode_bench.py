@@ -30,7 +30,7 @@ is asserted against the array shapes) and tok/s of the in-step merge vs the
 materialized plane, with greedy outputs asserted bit-identical.
 
 Usage: PYTHONPATH=src python -m benchmarks.paged_decode_bench
-           [--batch 4] [--models 4] [--adapters]
+           [--batch 4] [--models 4] [--adapters] [--json PATH]
 """
 from __future__ import annotations
 
@@ -39,6 +39,11 @@ import sys
 import time
 
 sys.path.insert(0, "src")
+
+try:
+    from bench_json import gate, write_bench_json
+except ImportError:
+    from benchmarks.bench_json import gate, write_bench_json
 
 import jax
 import numpy as np
@@ -246,12 +251,27 @@ if __name__ == "__main__":
     ap.add_argument("--adapters", action="store_true",
                     help="LoRA-spec'd plane (base + N adapters, in-step "
                          "merge) vs N materialized models")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serving.json here")
     args = ap.parse_args()
-    _, speedup = main(batch=args.batch, gen=args.gen, ctx_len=args.ctx)
-    assert speedup >= 2.0, f"batched paged decode only {speedup:.2f}x"
+    all_rows, gates = [], {}
+    rows, speedup = main(batch=args.batch, gen=args.gen, ctx_len=args.ctx)
+    all_rows += rows
+    gates["paged_over_dense_tok_s"] = gate(speedup, 2.0)
     if args.models > 1:
-        multi_model(n_models=args.models, gen=args.gen, ctx_len=args.ctx)
+        rows, fused_speedup = multi_model(n_models=args.models, gen=args.gen,
+                                          ctx_len=args.ctx)
+        all_rows += rows
+        gates["fused_over_loop_tok_s"] = gate(fused_speedup, 0.0)
     if args.adapters:
         ratio, parity = adapters_mode(n_models=args.models, gen=args.gen,
                                       ctx_len=args.ctx)
-        assert ratio > 1.5, f"adapter factoring saved only {ratio:.2f}x"
+        gates["adapter_weight_ratio"] = gate(ratio, 1.5)
+        gates["adapter_tok_s_parity"] = gate(parity, 0.0)
+    if args.json:
+        write_bench_json(args.json, "paged_decode", all_rows, gates=gates)
+    assert gates["paged_over_dense_tok_s"]["passed"], \
+        f"batched paged decode only {speedup:.2f}x"
+    if args.adapters:
+        assert gates["adapter_weight_ratio"]["passed"], \
+            f"adapter factoring saved only {gates['adapter_weight_ratio']}"

@@ -27,13 +27,31 @@ class HandoffPlan:
 
 
 class HandoffChannel:
-    """Costed transfer channel between a prefill and a decode worker."""
+    """Costed transfer channel between a prefill and a decode worker.
+
+    Two pricing paths:
+      - ``plan`` (dense / cross-mesh): ANALYTIC — bytes over link bandwidth
+        with the Appendix-B.2 staging penalty. The simulator's model; stays
+        analytic because the simulated transfer never actually runs.
+      - ``plan_paged`` (zero-copy paged handoff): MEASURED — the engine times
+        every real handoff (refcounting + tail-page CoW, ``observe_paged``)
+        and the plan reports the EWMA of those wall times. Before the first
+        observation the estimate is 0.0 (honest "no data"), never a made-up
+        wire constant: an in-process pointer handoff priced at link bandwidth
+        was fiction, and the router consumed it."""
+
+    #: EWMA weight for measured handoff samples (matches ThroughputEWMA's
+    #: smoothing horizon: a few dozen samples to converge)
+    MEASURE_ALPHA = 0.2
 
     def __init__(self, cfg: ModelConfig, *, link_gbps: float = 50.0,
                  n_links: int = 1, staging_penalty: float = 4.0):
         self.cfg = cfg
         self.bw = link_gbps * 1e9 * n_links
         self.staging_penalty = staging_penalty
+        self.measured_bytes = 0.0     # EWMA of observed paged-handoff bytes
+        self.measured_s = 0.0         # EWMA of observed paged-handoff seconds
+        self.samples = 0
 
     def plan(self, n_tokens: int, *, decode_hbm_free_bytes: int | None = None
              ) -> HandoffPlan:
@@ -43,13 +61,33 @@ class HandoffChannel:
         secs = b / self.bw * (self.staging_penalty if staged else 1.0)
         return HandoffPlan(bytes=b, seconds=secs, staged=staged)
 
+    def observe_paged(self, nbytes: int, seconds: float) -> None:
+        """Feed one MEASURED zero-copy handoff (metadata bytes + wall time
+        of the refcount/CoW work) into the channel's estimate. The engine
+        calls this at every prefill->decode handoff."""
+        self.samples += 1
+        if self.samples == 1:
+            self.measured_bytes = float(nbytes)
+            self.measured_s = float(seconds)
+        else:
+            a = self.MEASURE_ALPHA
+            self.measured_bytes += a * (nbytes - self.measured_bytes)
+            self.measured_s += a * (seconds - self.measured_s)
+
+    def estimate_paged_s(self) -> float:
+        """Expected wall time of one zero-copy handoff, from measurements
+        (0.0 until the first handoff has been observed)."""
+        return self.measured_s
+
     def plan_paged(self, n_pages: int) -> HandoffPlan:
         """Zero-copy handoff over the shared paged pool: the wire carries
         ONLY the block-table reference (int32 page ids + length/schema
         header); the KV pages themselves never move — the decode worker
-        reads them in place and refcounts keep them alive."""
+        reads them in place and refcounts keep them alive. ``seconds`` is
+        the measured per-handoff EWMA (see ``observe_paged``), not a
+        bandwidth fiction."""
         b = 4 * n_pages + 16
-        return HandoffPlan(bytes=b, seconds=b / self.bw, staged=False)
+        return HandoffPlan(bytes=b, seconds=self.measured_s, staged=False)
 
     @staticmethod
     def check(producer: CacheSchema, consumer_expected: CacheSchema) -> None:

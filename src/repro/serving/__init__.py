@@ -1,8 +1,12 @@
 from repro.serving.api import (FINISH_ABORT, FINISH_EOS, FINISH_LENGTH,
                                FINISH_STOP, RequestOutput, SamplingParams,
                                SharedContext, UnknownModelError)
+from repro.serving.autoscale import (AutoscaleConfig, AutoscaleSignals,
+                                     Autoscaler, ResizeDecision)
 from repro.serving.costmodel import CostModel
 from repro.serving.decode import FusedDecodePlane, StackedDecoders
+from repro.serving.metrics import (MetricsRegistry, RequestTrace,
+                                   lint_prometheus)
 from repro.serving.registry import (DecodeModelSpec, LoRAAdapter,
                                     ModelRegistry)
 from repro.serving.simulator import ServingConfig, Simulator
@@ -11,7 +15,9 @@ from repro.serving.workload import PATTERNS, Session, make_sessions
 __all__ = [
     "FINISH_ABORT", "FINISH_EOS", "FINISH_LENGTH", "FINISH_STOP",
     "RequestOutput", "SamplingParams", "SharedContext", "UnknownModelError",
+    "AutoscaleConfig", "AutoscaleSignals", "Autoscaler", "ResizeDecision",
     "CostModel", "FusedDecodePlane", "StackedDecoders",
+    "MetricsRegistry", "RequestTrace", "lint_prometheus",
     "DecodeModelSpec", "LoRAAdapter", "ModelRegistry",
     "ServingConfig", "Simulator", "PATTERNS", "Session", "make_sessions",
 ]

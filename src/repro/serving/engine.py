@@ -100,8 +100,11 @@ from repro.kvcache.radix import NullPrefixIndex, PrefixIndex
 from repro.models import forward
 from repro.serving.api import (FINISH_ABORT, FINISH_LENGTH, RequestOutput,
                                SamplingParams, SharedContext)
+from repro.serving.autoscale import Autoscaler
 from repro.serving.backpressure import ThroughputEWMA
 from repro.serving.decode import FusedDecodePlane, sampling_arrays
+from repro.serving.metrics import (SPAN_FIRST_TOKEN, SPAN_HANDOFF,
+                                   SPAN_ROUTED, SPAN_TOKEN, MetricsRegistry)
 from repro.serving.registry import ModelRegistry, as_spec
 from repro.serving.router import PrefillRouter
 from repro.serving.sampling import sample_step
@@ -144,20 +147,85 @@ class DecodeSeq:
     out: list = field(default_factory=list)
 
 
-@dataclass
+class _CounterField:
+    """EngineStats field descriptor backed by a registry ``Counter``: reads
+    return ints (legacy ``stats.handoffs == 3`` comparisons keep holding),
+    writes (``+= n``, ``= 0``) go straight to the counter cell — so the SAME
+    number the old attribute surface exposes is what ``engine.metrics()``
+    snapshots and ``render_prometheus()`` exports, with no double
+    bookkeeping."""
+
+    __slots__ = ("prom", "help", "name")
+
+    def __init__(self, prom: str, help: str = ""):
+        self.prom = prom
+        self.help = help
+
+    def __set_name__(self, owner, name):
+        self.name = name
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return int(obj._cells[self.name].value)
+
+    def __set__(self, obj, v):
+        obj._cells[self.name].value = float(v)
+
+
 class EngineStats:
-    prefill_tokens_computed: int = 0
-    prefill_tokens_reused: int = 0
-    handoffs: int = 0
-    handoff_bytes: int = 0
-    cow_page_copies: int = 0
-    decode_steps: int = 0
-    decode_tokens: int = 0
-    decode_dispatches: int = 0    # jitted decode forwards issued
-    model_churn_events: int = 0   # accepted register/unregister mutations
-    plane_rebuilds: int = 0       # fused-plane relayouts applied at step
-                                  # boundaries (each re-jits the stacked step)
-    _engine: object = field(default=None, repr=False, compare=False)
+    """Engine counters, re-implemented as a VIEW over the metrics registry
+    (serving/metrics.py): each field is a registry counter cell, so the
+    legacy attribute surface (``stats.handoffs += 1``, ``stats() -> dict``)
+    and the new observability surface (``engine.metrics()``, Prometheus
+    exposition) are the same numbers by construction. Counters stay real
+    even with metrics disabled — ``stats()`` predates the registry and must
+    keep working either way."""
+
+    prefill_tokens_computed = _CounterField(
+        "engine_prefill_tokens_computed_total",
+        "prompt tokens actually run through the base prefill model")
+    prefill_tokens_reused = _CounterField(
+        "engine_prefill_tokens_reused_total",
+        "prompt tokens served from cached prefix KV (never recomputed)")
+    handoffs = _CounterField(
+        "engine_handoffs_total", "prefill->decode cache handoffs")
+    handoff_bytes = _CounterField(
+        "engine_handoff_bytes_total",
+        "handoff wire bytes (paged: block-table metadata only)")
+    cow_page_copies = _CounterField(
+        "engine_cow_page_copies_total",
+        "partial tail pages cloned at handoff (page-level copy-on-write)")
+    decode_steps = _CounterField(
+        "engine_decode_steps_total", "engine decode steps")
+    decode_tokens = _CounterField(
+        "engine_decode_tokens_total", "tokens generated across all sequences")
+    decode_dispatches = _CounterField(
+        "engine_decode_dispatches_total", "jitted decode forwards issued")
+    model_churn_events = _CounterField(
+        "engine_model_churn_events_total",
+        "accepted register/unregister mutations")
+    plane_rebuilds = _CounterField(
+        "engine_plane_rebuilds_total",
+        "fused-plane relayouts applied at step boundaries")
+
+    FIELDS = ("prefill_tokens_computed", "prefill_tokens_reused", "handoffs",
+              "handoff_bytes", "cow_page_copies", "decode_steps",
+              "decode_tokens", "decode_dispatches", "model_churn_events",
+              "plane_rebuilds")
+
+    def __init__(self, _engine: object = None,
+                 registry: MetricsRegistry | None = None):
+        self._engine = _engine
+        # standalone EngineStats() (DensePrefillWorker default) gets a
+        # private registry; the engine passes its own so all surfaces share
+        # one set of cells
+        self.registry = MetricsRegistry() if registry is None else registry
+        cls = type(self)
+        self._cells = {
+            name: self.registry.counter(cls.__dict__[name].prom,
+                                        cls.__dict__[name].help)
+            for name in self.FIELDS}
 
     @property
     def hit_ratio(self):
@@ -175,8 +243,7 @@ class EngineStats:
         the same accounting path the simulator reports) and the pool's
         eviction/occupancy counters. Benches and the simulator read this one
         number instead of stitching per-manager fragments."""
-        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
-             if not f.name.startswith("_")}
+        d = {name: getattr(self, name) for name in self.FIELDS}
         d["hit_ratio"] = self.hit_ratio
         d["decode_batch_mean"] = self.decode_batch_mean
         eng = self._engine
@@ -440,11 +507,21 @@ class LocalDisaggEngine:
                  n_prefill_workers: int = 1, router_policy: str = "pinned",
                  chunked: bool = False, token_budget: int = 256,
                  chunk_size: int = 64, sched_policy: str = "fcfs",
-                 fused: bool | None = None, prefix_cache: bool = True):
+                 fused: bool | None = None, prefix_cache: bool = True,
+                 metrics: bool = True, autoscale=None):
         self.cfg = cfg
         self.base_params = base_params
         self.page_size = page_size
-        self.stats = EngineStats(_engine=self)
+        # observability control plane (serving/metrics.py): ONE registry the
+        # engine, router, scheduler, pool, and prefix index publish into —
+        # engine.metrics() / engine.render_prometheus() export it.
+        # metrics=False degrades histograms/gauges/traces to shared no-op
+        # singletons (the decode hot loop skips observation entirely via
+        # _metrics_on); counters stay real because stats() runs on them.
+        self._metrics_on = metrics
+        self.metrics_registry = MetricsRegistry(enabled=metrics)
+        self.stats = EngineStats(_engine=self,
+                                 registry=self.metrics_registry)
         self.chunked = chunked
         self.paged = PagedKVPool.supports(cfg) if paged is None else paged
         if self.paged and not PagedKVPool.supports(cfg):
@@ -530,6 +607,21 @@ class LocalDisaggEngine:
         self._requests: dict[int, RequestOutput] = {}
         self._ephemeral_sids: dict[int, int] = {}      # rid -> auto session
         self._next_ctx_sid = 1 << 40
+        self._init_metrics()
+        # metrics-driven elastic prefill:decode scaling: an Autoscaler
+        # (serving/autoscale.py AutoscaleConfig) consumes the registry's
+        # backlog/occupancy/latency signals at STEP BOUNDARIES (the same
+        # place model churn applies — scheduler.step after models.sync) and
+        # resizes the prefill worker pool / decode admission reserve.
+        self._autoscaler = (None if autoscale is None
+                            else Autoscaler(autoscale))
+        #: extra pool pages held back from prefill chunking and decode
+        #: admission on top of the worst-case tail-growth reserve — the
+        #: autoscaler's decode-side protection knob (scheduler reads it)
+        self.sched_reserve_extra = 0
+        #: pages one reserve_delta step moves (quantized so a single
+        #: autoscale tick shifts meaningful headroom, not one page)
+        self._reserve_quantum = max(1, num_pages // 32)
 
     #: half-life of the issued-work router signal, in seconds of WALL TIME.
     #: Decay must be a function of elapsed time, not of pick count — a
@@ -575,8 +667,188 @@ class LocalDisaggEngine:
                 else:
                     cold = n - w.mgr.index.match_len(tokens)
                 cold_s.append(w.ewma.backlog_seconds(cold))
-        return self.prefill_workers[
-            self.router.pick(sid, now, backlogs, cold_s)]
+        # the router prices expected completion time in MEASURED seconds:
+        # backlog + cold prefill + the measured handoff estimate (EWMA of
+        # real zero-copy handoffs — kvcache/handoff.py observe_paged), not
+        # the old decorative bandwidth constant
+        picked = self.router.pick(sid, now, backlogs, cold_s,
+                                  handoff_s=self.handoff.estimate_paged_s())
+        if self._metrics_on:
+            self._c_router_picks.inc()
+            if picked != sid % len(self.prefill_workers):
+                self._c_router_nonhome.inc()
+        return self.prefill_workers[picked]
+
+    # ------------------------------------------------------------------
+    # observability (serving/metrics.py; docs/api.md "Observability")
+    # ------------------------------------------------------------------
+    def _init_metrics(self) -> None:
+        """Bind the engine's instruments. Histograms are created up front so
+        hot paths hold direct references (no registry lookups per sample);
+        gauges are fn-backed collectors sampled only at export time, so pool
+        occupancy / queue depths / radix size cost nothing per step."""
+        reg = self.metrics_registry
+        self._h_ttft = reg.histogram(
+            "engine_ttft_seconds", "submit -> first streamed token",
+            lo=1e-5, hi=600.0)
+        self._h_itl = reg.histogram(
+            "engine_itl_seconds", "gap between consecutive streamed tokens",
+            lo=1e-6, hi=60.0)
+        self._h_queue = reg.histogram(
+            "engine_queue_depth", "waiting+prefilling requests, per step",
+            lo=1.0, hi=4096.0, growth=1.5)
+        self._h_occ = reg.histogram(
+            "engine_page_occupancy",
+            "non-free pool page fraction, per step", lo=1e-3, hi=1.0)
+        self._h_batch = reg.histogram(
+            "engine_decode_batch", "sequences per decode step",
+            lo=1.0, hi=4096.0, growth=1.5)
+        self._h_handoff_s = reg.histogram(
+            "engine_handoff_seconds",
+            "measured prefill->decode handoff wall time", lo=1e-7, hi=10.0)
+        self._h_handoff_b = reg.histogram(
+            "engine_handoff_plan_bytes", "handoff metadata bytes",
+            lo=1.0, hi=1e9, growth=2.0)
+        self._c_router_picks = reg.counter(
+            "engine_router_picks_total", "prefill routing decisions")
+        self._c_router_nonhome = reg.counter(
+            "engine_router_nonhome_picks_total",
+            "routing decisions away from the session's home worker")
+        self._c_autoscale = reg.counter(
+            "engine_autoscale_decisions_total",
+            "autoscaler resize decisions applied")
+        reg.gauge("engine_prefill_workers", "live prefill workers",
+                  fn=lambda: len(self.prefill_workers))
+        reg.gauge("engine_waiting_requests", "requests awaiting admission",
+                  fn=lambda: len(self.scheduler.waiting))
+        reg.gauge("engine_prefilling_requests", "requests mid-prefill",
+                  fn=lambda: len(self.scheduler.prefilling))
+        reg.gauge("engine_active_sequences", "sequences decoding",
+                  fn=lambda: len(self.scheduler.active))
+        reg.gauge("engine_sched_reserve_extra_pages",
+                  "autoscaler decode admission reserve (pages)",
+                  fn=lambda: self.sched_reserve_extra)
+        if self.block_pool is not None:
+            reg.gauge("engine_pool_free_pages", "free pool pages",
+                      fn=lambda: self.block_pool.free_count)
+            reg.gauge("engine_pool_active_pages", "refcount-held pool pages",
+                      fn=lambda: self.block_pool.active_count)
+            reg.gauge("engine_pool_cached_pages",
+                      "LRU-cached (evictable) pool pages",
+                      fn=lambda: self.block_pool.cached_count)
+        if self.prefix_index is not None:
+            reg.gauge("engine_prefix_nodes", "radix prefix-index nodes",
+                      fn=lambda: len(self.prefix_index))
+
+    def metrics(self) -> dict:
+        """The full observability surface as structured dicts:
+        ``{"counters", "gauges", "histograms"}`` (histograms carry
+        count/sum/mean/min/max/p50/p95/p99) plus ``"traces"`` — the retained
+        per-request lifecycle traces (span-event dicts; see docs/api.md).
+        ``engine.stats()`` remains the legacy counter rollup; this is the
+        superset it is implemented on."""
+        out = self.metrics_registry.snapshot()
+        out["traces"] = [t.as_dict() for t in self.metrics_registry.traces()]
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition of every registered metric (what a
+        scrape endpoint would serve; linted in CI via
+        ``metrics.lint_prometheus``)."""
+        return self.metrics_registry.render_prometheus()
+
+    def _observe_step(self) -> None:
+        """Per-step occupancy/queue observations (called from the scheduler
+        at every step boundary; one histogram sample each, no allocation
+        when metrics are disabled)."""
+        if not self._metrics_on:
+            return
+        sched = self.scheduler
+        self._h_queue.observe(len(sched.waiting) + len(sched.prefilling))
+        if self.block_pool is not None:
+            pool = self.block_pool
+            self._h_occ.observe(1.0 - pool.free_count / pool.num_blocks)
+
+    # ------------------------------------------------------------------
+    # elastic prefill:decode scaling (serving/autoscale.py)
+    # ------------------------------------------------------------------
+    def _autoscale_signals(self):
+        """Assemble the control-loop inputs from the live engine state +
+        metric windows (TTFT/ITL p95 read straight off the histograms)."""
+        from repro.serving.autoscale import AutoscaleSignals
+        sched = self.scheduler
+        backlog_tokens = (sum(r.n - r.done for r in sched.prefilling)
+                          + sum(r.n for r in sched.waiting))
+        rates = [w.ewma.s_per_token for w in self.prefill_workers]
+        spt = sum(rates) / len(rates)
+        slots = max(sched.cfg.token_budget, 1)
+        pool = self.block_pool
+        return AutoscaleSignals(
+            prefill_backlog_tokens=backlog_tokens,
+            prefill_backlog_s=backlog_tokens * spt,
+            decode_occupancy=len(sched.active) / slots,
+            free_page_frac=(pool.free_count / pool.num_blocks
+                            if pool is not None else 1.0),
+            ttft_p95_s=self._h_ttft.percentile(95),
+            itl_p95_s=self._h_itl.percentile(95),
+            n_prefill=len(self.prefill_workers),
+            n_decode=1,
+            inflight_decode=len(sched.active))
+
+    def _autoscale_tick(self) -> None:
+        """Step-boundary resize hook (scheduler.step, right after model
+        churn applies — the one place worker-set mutations are legal).
+        prefill_delta resizes the REAL worker pool (PR 5 pattern: new
+        workers share the pool, the radix tree, and the stats cells, and
+        become routable immediately); decode_delta maps onto the decode
+        admission reserve — the engine's decode plane is one fused step, so
+        "more decode capacity" means holding back pages from prefill so
+        promotions never squeeze running generations."""
+        if self._autoscaler is None:
+            return
+        d = self._autoscaler.tick(self._autoscale_signals(),
+                                  time.monotonic())
+        if d.prefill_delta > 0:
+            self._add_prefill_worker()
+            self._c_autoscale.inc()
+        elif d.prefill_delta < 0:
+            if self._remove_prefill_worker():
+                self._c_autoscale.inc()
+        if d.decode_delta:
+            cap = self.block_pool.num_blocks if self.block_pool else 0
+            self.sched_reserve_extra = min(
+                max(self.sched_reserve_extra
+                    + d.decode_delta * self._reserve_quantum, 0),
+                cap // 2)
+
+    def _add_prefill_worker(self) -> None:
+        """Grow the prefill pool by one worker sharing the engine's page
+        pool, global radix tree, and stats cells; the router sees it for the
+        next pick. Paged plane only (the dense fallback has per-worker
+        private pools that cannot be hot-joined)."""
+        assert self.paged, "elastic prefill pool requires the paged plane"
+        w = PrefillWorker(len(self.prefill_workers), self.cfg,
+                          self.base_params, self.kvpool, self.block_pool,
+                          self.stats, index=self.prefix_index)
+        self.prefill_workers.append(w)
+        self.router.n = len(self.prefill_workers)
+
+    def _remove_prefill_worker(self) -> bool:
+        """Shrink the prefill pool by one, only if the LAST worker is fully
+        idle — no live sessions, no admitted request holds a reference to
+        it, no pending chunk work. Returns False (decision deferred) when
+        the candidate is busy; the autoscaler retries next tick. Never drops
+        below one worker."""
+        if len(self.prefill_workers) <= 1:
+            return False
+        w = self.prefill_workers[-1]
+        sched = self.scheduler
+        if (w.sessions or w.pending_chunk_tokens
+                or any(r.worker is w for r in sched.prefilling)):
+            return False
+        self.prefill_workers.pop()
+        self.router.n = len(self.prefill_workers)
+        return True
 
     # ------------------------------------------------------------------
     # model lifecycle (driven by repro.serving.registry.ModelRegistry)
@@ -634,6 +906,7 @@ class LocalDisaggEngine:
         handoff refs rolled back) if the clone page cannot be allocated."""
         dw = self.decoders[model_id]
         HandoffChannel.check(self.schema, dw.expected_schema)
+        t0 = time.perf_counter()
         bt = list(block_table)
         self.block_pool.ref(bt)
         shared, private = list(bt), []
@@ -653,8 +926,19 @@ class LocalDisaggEngine:
             bt = bt[:-1] + [fresh]
             self.stats.cow_page_copies += 1
         plan = self.handoff.plan_paged(len(bt))
+        # the handoff channel is priced by MEASUREMENT: the wall time of the
+        # refcount + CoW work just done (the whole zero-copy handoff) feeds
+        # the EWMA that plan_paged/estimate_paged_s report and the router
+        # prices — replacing the old link-bandwidth fiction
+        dt = time.perf_counter() - t0
+        self.handoff.observe_paged(plan.bytes, dt)
         self.stats.handoffs += 1
         self.stats.handoff_bytes += plan.bytes         # metadata only
+        if self._metrics_on:
+            self._h_handoff_s.observe(dt)
+            self._h_handoff_b.observe(plan.bytes)
+            self.metrics_registry.trace(rid).event(
+                SPAN_HANDOFF, bytes=plan.bytes, seconds=dt)
         return DecodeSeq(rid, sid, model_id, bt, shared, private, n,
                          first_token, params.max_tokens, params)
 
@@ -693,6 +977,9 @@ class LocalDisaggEngine:
             self.models.check_serving(model_id)
         rid = self._next_rid
         self._next_rid += 1
+        # lifecycle trace opens HERE (queued span), at the same instant the
+        # rid exists; every later stage appends to it via the registry
+        self.metrics_registry.start_trace(rid, model_id)
         params = self._resolve_seed(params, rid)
         tokens = [int(t) for t in np.asarray(context_tokens)]
         if self.chunked:
@@ -703,6 +990,7 @@ class LocalDisaggEngine:
             self._next_seq += 1
             return rid
         worker = self._pick_worker(sid, tokens)
+        self.metrics_registry.trace(rid).event(SPAN_ROUTED, worker=worker.wid)
         bt, n = worker.prefill(sid, tokens)
         if params.max_tokens == 0:
             self._finish_prefill_only(rid)
@@ -841,6 +1129,10 @@ class LocalDisaggEngine:
         self._on_request_done(rid, FINISH_LENGTH)
 
     def _on_request_done(self, rid: int, reason: str) -> None:
+        # terminal trace span: "aborted" for aborts (at ANY lifecycle
+        # stage — queued / prefilling / held / decoding all funnel here),
+        # "finished" with the reason otherwise
+        self.metrics_registry.trace(rid).close(reason)
         out = self._requests.pop(rid, None)        # engine-side handle ref:
         if out is not None:                        # dropped once finished
             out._mark_finished(reason)
@@ -865,6 +1157,10 @@ class LocalDisaggEngine:
                                           first_token)
         for t in toks:
             out._push(int(t))
+        if self._metrics_on and out.ttft is not None:
+            self._h_ttft.observe(out.ttft)
+            for gap in out.inter_token_latencies():
+                self._h_itl.observe(gap)
         out._mark_finished(reason)
         if ephemeral:
             self.end_session(sid)
@@ -914,7 +1210,8 @@ class LocalDisaggEngine:
                 by_model.setdefault(s.model_id, []).append(i)
             for mid, idx in by_model.items():
                 nxt[idx] = self._batched_step(mid, [seqs[i] for i in idx])
-        for i, s in enumerate(seqs):
+        metrics_on = self._metrics_on      # ONE branch per token when off —
+        for i, s in enumerate(seqs):       # no metric objects touched at all
             t = int(nxt[i])
             s.out.append(t)
             s.next_token = t
@@ -923,6 +1220,20 @@ class LocalDisaggEngine:
             out = self._requests.get(s.rid)
             if out is not None:
                 out._push(t)
+                if metrics_on:
+                    # TTFT/ITL histograms + trace spans use the SAME
+                    # timestamps RequestOutput just recorded at push time,
+                    # so exported percentiles are exactly what a streaming
+                    # client observes
+                    times = out.token_times
+                    if len(times) == 1:
+                        self._h_ttft.observe(times[0] - out.submit_time)
+                        self.metrics_registry.trace(s.rid).event(
+                            SPAN_FIRST_TOKEN, t=times[0])
+                    else:
+                        self._h_itl.observe(times[-1] - times[-2])
+                        self.metrics_registry.trace(s.rid).event(
+                            SPAN_TOKEN, t=times[-1])
             reason = s.params.is_stop(t)
             if reason is not None:
                 s.finish_reason = reason
@@ -931,6 +1242,8 @@ class LocalDisaggEngine:
         # decode_batch_mean) mean the same thing fused and legacy
         self.stats.decode_steps += 1
         self.stats.decode_tokens += len(seqs)
+        if metrics_on:
+            self._h_batch.observe(len(seqs))
 
     def _batched_step(self, mid: str, seqs: list[DecodeSeq]) -> np.ndarray:
         """One per-model jitted forward (legacy fused=False dispatch unit);

@@ -40,13 +40,21 @@ class PrefillRouter:
         self.policy = policy
         self.spill = spill_threshold_s
 
-    def pick(self, sid: int, now: float, backlogs, cold_s=None) -> int:
+    def pick(self, sid: int, now: float, backlogs, cold_s=None,
+             handoff_s: float = 0.0) -> int:
         """backlogs: per-worker estimated seconds of queued work.
         cold_s: per-worker estimated seconds to prefill THIS request's
         uncached tokens there (None when the caller has no prefix estimate —
         ``prefix_aware`` then falls back to pure backlog).
+        handoff_s: MEASURED expected handoff cost appended to every
+        candidate's completion-time estimate (the EWMA of real zero-copy
+        handoffs — ``HandoffChannel.estimate_paged_s`` — not the old
+        bandwidth fiction). In-process it is worker-independent, so today it
+        calibrates the estimate without changing the argmin; once cross-mesh
+        page transport lands (ROADMAP) it becomes per-candidate and starts
+        steering placement.
 
-        The engine prices both signals with a MEASURED per-worker s/token
+        The engine prices all signals with a MEASURED per-worker s/token
         EWMA (serving.backpressure.ThroughputEWMA) over both eager issued
         work and, in chunked mode, the admitted-but-uncomputed chunk
         backlog — so routing compares real seconds, not a hardcoded
@@ -56,10 +64,11 @@ class PrefillRouter:
         if self.policy == "pinned":
             return home
         if self.policy == "prefix_aware":
-            # expected completion time = queue wait + own cold prefill;
-            # ties (e.g. idle fleet, global tree => equal hit) stay home so
-            # per-session fast paths keep their locality
+            # expected completion time = queue wait + own cold prefill +
+            # measured handoff; ties (e.g. idle fleet, global tree => equal
+            # hit) stay home so per-session fast paths keep their locality
             total = [backlogs[i] + (cold_s[i] if cold_s is not None else 0.0)
+                     + handoff_s
                      for i in range(self.n)]
             return min(range(self.n), key=lambda i: (total[i], i != home))
         least = min(range(self.n), key=lambda i: backlogs[i])

@@ -147,6 +147,12 @@ class ChunkedScheduler:
         # lane indices are re-derived from the new plane this same step, so
         # surviving requests decode bit-identically across the churn)
         self.engine.models.sync()
+        # same boundary: observe queue depth / pool occupancy into the
+        # metrics registry, then let the autoscaler resize the prefill pool
+        # or the decode admission reserve off those signals — worker-set
+        # mutations are only legal here, exactly like model churn
+        self.engine._observe_step()
+        self.engine._autoscale_tick()
         progress += self._admit()
         budget = self.cfg.token_budget - len(self.active)
         chunks = self._plan_chunks(budget)
@@ -154,6 +160,12 @@ class ChunkedScheduler:
         progress += self._promote()
         progress += self._decode_phase()
         if progress == 0 and (self.waiting or self.prefilling):
+            if self.engine.sched_reserve_extra > 0:
+                # the autoscaler's extra decode headroom is advisory — it
+                # must never wedge the engine. If it is the only thing
+                # blocking progress, give it back and retry next step.
+                self.engine.sched_reserve_extra = 0
+                return
             raise PoolExhausted(
                 f"scheduler stalled: {len(self.waiting)} waiting / "
                 f"{len(self.prefilling)} prefilling requests cannot obtain "
@@ -174,6 +186,8 @@ class ChunkedScheduler:
             self.waiting.remove(r)
             w = self.engine._pick_worker(r.sid, r.tokens)
             r.worker = w
+            self.engine.metrics_registry.trace(r.rid).event(
+                "routed", worker=w.wid)
             sc = w.sessions.get(r.sid)
             if sc is not None and sc.tokens == r.tokens:
                 # identical-context sibling: the session's pages already hold
@@ -204,9 +218,10 @@ class ChunkedScheduler:
         page = self.engine.page_size
         chunks = []
         # prefill never takes the pool below the pages active decodes are
-        # still entitled to (worst-case tail growth), so chunking cannot
-        # starve the decode plane mid-flight
-        reserve = self._decode_reserve()
+        # still entitled to (worst-case tail growth) plus the autoscaler's
+        # extra decode headroom, so chunking cannot starve the decode plane
+        # mid-flight
+        reserve = self._decode_reserve() + self.engine.sched_reserve_extra
         pool = self.engine.block_pool
         pending = [r for r in self.prefilling
                    if r.done < r.n and r.sibling_bt is None]
@@ -268,6 +283,8 @@ class ChunkedScheduler:
                 r.done += S
                 r.worker.pending_chunk_tokens -= S
                 r.worker.ewma.observe(S, dt / B)
+                eng.metrics_registry.trace(r.rid).event(
+                    "chunk_prefilled", tokens=S, done=r.done)
             eng.stats.prefill_tokens_computed += B * S
             self.stats.chunks += B
             self.stats.chunk_tokens += B * S
@@ -326,7 +343,8 @@ class ChunkedScheduler:
             # it could deadlock every generation mid-flight
             cow = 1 if r.n % page else 0
             growth = -(-(r.n + r.gen_tokens) // page) - (-(-r.n // page))
-            if pool.free_count - cow - growth < self._decode_reserve():
+            if (pool.free_count - cow - growth
+                    < self._decode_reserve() + self.engine.sched_reserve_extra):
                 self.stats.stalls += 1
                 continue
             bt = r.sibling_bt

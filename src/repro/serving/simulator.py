@@ -76,6 +76,15 @@ class ServingConfig:
                                    # every decode worker's progress for this
                                    # long — fig3-style runs price churn with
                                    # exactly this stall.
+    autoscale: object = None       # None = static split; True or an
+                                   # AutoscaleConfig (serving/autoscale.py)
+                                   # = metrics-driven elastic prefill:decode
+                                   # scaling: worker pools are built at the
+                                   # autoscale max sizes, n_prefill_workers/
+                                   # n_decode_workers become the STARTING
+                                   # active counts, and a recurring tick
+                                   # shifts workers between the pools off
+                                   # backlog/occupancy/TTFT signals.
 
 
 @dataclass
@@ -196,14 +205,36 @@ class Simulator:
         cost = CostModel(model_cfg, chips=scfg.chips_per_worker)
         kv_budget = scfg.hbm_per_worker - model_cfg.param_count() * 2
         assert kv_budget > 0, "worker HBM cannot even hold the weights"
+        # elastic scaling (serving/autoscale.py): worker lists are built at
+        # the autoscale MAX sizes; only the first n_*_on of each are routable
+        # ("active"). A deactivated worker finishes what it holds (queued
+        # prefills drain, decoding sequences run out) — it just receives no
+        # new work, the same step-boundary semantics as the real engine.
+        self.autoscaler = None
+        n_pre, n_dec = scfg.n_prefill_workers, scfg.n_decode_workers
+        max_pre, max_dec = n_pre, n_dec
+        if scfg.autoscale is not None and scfg.mode == "prefillshare":
+            from repro.serving.autoscale import AutoscaleConfig, Autoscaler
+            acfg = scfg.autoscale
+            if acfg is True:
+                acfg = AutoscaleConfig(decode_slots=scfg.max_decode_batch)
+            self.autoscaler = Autoscaler(acfg)
+            acfg = self.autoscaler.cfg
+            max_pre = max(n_pre, acfg.max_prefill)
+            max_dec = max(n_dec, acfg.max_decode)
         self.prefill = [
             _PrefillWorker(i, model_cfg, cost, kv_budget, scfg.block_size,
                            chunk_tokens=scfg.prefill_chunk_tokens)
-            for i in range(scfg.n_prefill_workers)]
+            for i in range(max_pre)]
         self.decode = [
             _DecodeWorker(i, model_cfg, cost, scfg.hbm_per_worker,
                           scfg.max_decode_batch)
-            for i in range(scfg.n_decode_workers)]
+            for i in range(max_dec)]
+        self.n_prefill_on = n_pre
+        self.n_decode_on = n_dec
+        #: analytic per-token prefill seconds, for pricing queued backlog
+        self._prefill_spt = cost.prefill(256, 0).seconds / 256
+        self._ttft_window: list[float] = []    # recent TTFTs (p95 signal)
         self.handoff = HandoffChannel(model_cfg, n_links=scfg.handoff_links,
                                       staging_penalty=scfg.staging_penalty)
         max_ctx = max(
@@ -228,20 +259,24 @@ class Simulator:
         self.t_end = 0.0
         self.churn_events = 0
         self.churn_stall_s = 0.0
+        self.resize_events = 0
         if scfg.churn_interval_s > 0:
             self._push(scfg.churn_interval_s, "model_churn", None)
+        if self.autoscaler is not None:
+            self._push(self.autoscaler.cfg.interval_s, "autoscale_tick", None)
 
     # -- routing (paper §3.3 prefix-aware routing) ----------------------
     def route_prefill(self, st: _SessionState, model_id: int,
                       now: float = 0.0) -> _PrefillWorker:
         if self.scfg.mode != "prefillshare":
             return self.prefill[model_id % len(self.prefill)]
+        active = self.prefill[:self.n_prefill_on]
         backlogs = [max(0.0, w.busy_until - now)
-                    + 0.05 * len(w.queue) for w in self.prefill]
-        return self.prefill[self.router.pick(st.session.sid, now, backlogs)]
+                    + 0.05 * len(w.queue) for w in active]
+        return active[self.router.pick(st.session.sid, now, backlogs)]
 
     def route_decode(self, model_id: int) -> _DecodeWorker:
-        return self.decode[model_id % len(self.decode)]
+        return self.decode[model_id % self.n_decode_on]
 
     # -- event plumbing --------------------------------------------------
     def _push(self, t, kind, payload):
@@ -425,6 +460,71 @@ class Simulator:
                 or any(kind == "arrive" for _, _, kind, _ in self.events)):
             self._push(t + self.scfg.churn_interval_s, "model_churn", None)
 
+    # -- metrics-driven elastic scaling ----------------------------------
+    def _autoscale_signals(self, t):
+        """Control-loop inputs from the live fleet — the same signal set the
+        real engine assembles from its metrics registry."""
+        from repro.serving.autoscale import AutoscaleSignals
+        act_p = self.prefill[:self.n_prefill_on]
+        backlog_tokens = 0
+        busy_s = 0.0
+        for w in act_p:
+            busy_s += max(0.0, w.busy_until - t)
+            for item in w.queue:
+                if len(item) > 3 and item[3] is not None:      # mid-chunks
+                    backlog_tokens += item[3]["n_new"] - item[3]["done"]
+                else:
+                    backlog_tokens += len(item[0].context)
+        act_d = self.decode[:self.n_decode_on]
+        inflight = sum(len(dw.active) for dw in act_d)
+        # occupancy counts DEMAND, not just admitted work: sessions parked in
+        # the admission queue (B.2 backpressure) are imminent decode load the
+        # slots must absorb — without them the signal stays calm exactly when
+        # decode is the bottleneck deferring admissions. inflight_decode stays
+        # the admitted truth (the shrink-safety guard needs real residency).
+        demand = inflight + len(self.admission_queue)
+        slots = self.n_decode_on * self.scfg.max_decode_batch
+        # decode KV headroom, the analog of the engine's shared-pool free
+        # fraction: under B.2 backpressure a full decode HBM DEFERS handoffs
+        # at the prefill side, so neither inflight nor the admission queue
+        # ever shows the pressure — the resident-bytes headroom does.
+        free_frac = min((max(0.0, 1.0 - dw.resident_bytes()
+                             / max(dw.hbm - dw.weight_bytes, 1.0))
+                         for dw in act_d), default=1.0)
+        recent = self._ttft_window[-64:]
+        ttft_p95 = (float(np.percentile(recent, 95)) if recent
+                    else float("nan"))
+        itls = [dw.itl() for dw in act_d if dw.active]
+        return AutoscaleSignals(
+            prefill_backlog_tokens=backlog_tokens,
+            prefill_backlog_s=(backlog_tokens * self._prefill_spt + busy_s),
+            decode_occupancy=demand / max(slots, 1),
+            free_page_frac=free_frac,
+            ttft_p95_s=ttft_p95,
+            itl_p95_s=max(itls) if itls else float("nan"),
+            n_prefill=self.n_prefill_on,
+            n_decode=self.n_decode_on,
+            inflight_decode=inflight)
+
+    def _on_autoscale_tick(self, t, _payload):
+        d = self.autoscaler.tick(self._autoscale_signals(t), t)
+        if d:
+            if d.prefill_delta > 0 and self.n_prefill_on < len(self.prefill):
+                self.n_prefill_on += 1
+            elif d.prefill_delta < 0 and self.n_prefill_on > 1:
+                self.n_prefill_on -= 1
+            if d.decode_delta > 0 and self.n_decode_on < len(self.decode):
+                self.n_decode_on += 1
+            elif d.decode_delta < 0 and self.n_decode_on > 1:
+                self.n_decode_on -= 1
+            self.router.n = self.n_prefill_on
+            self.resize_events += 1
+        # keep ticking only while the workload is live (same guard as churn)
+        if (self.states or self.admission_queue
+                or any(kind == "arrive" for _, _, kind, _ in self.events)):
+            self._push(t + self.autoscaler.cfg.interval_s,
+                       "autoscale_tick", None)
+
     def _on_decode_start(self, t, payload):
         wid, st, inv, rec = payload
         dw = self.decode[wid]
@@ -447,6 +547,7 @@ class Simulator:
                           "kv_len": float(len(st.context)),
                           "meta": (st, inv, rec)}
         rec.ttft = t + dw.itl() - rec.issued        # first token after one step
+        self._ttft_window.append(rec.ttft)          # autoscaler p95 signal
         self._reschedule(t, dw)
 
     def _reschedule(self, t, dw: _DecodeWorker):
@@ -509,4 +610,7 @@ class Simulator:
                 [r.finish_reason == "eos" for r in recs])) if recs else 0.0,
             "churn_events": self.churn_events,
             "churn_stall_s": self.churn_stall_s,
+            "resize_events": self.resize_events,
+            "final_prefill_workers": self.n_prefill_on,
+            "final_decode_workers": self.n_decode_on,
         }

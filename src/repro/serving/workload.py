@@ -68,3 +68,61 @@ def make_sessions(pattern: str, *, n_sessions: int, arrival_rate: float,
                                 invocations=invs,
                                 system_tokens=prof["system"]))
     return sessions
+
+
+# Diurnal two-phase profiles: the workload MIX flips mid-run, which is what
+# makes any static prefill:decode split wrong in one of the phases — the
+# autoscaler's test scenario (serving/autoscale.py; benchmarks/
+# autoscale_sim.py gates autoscale vs every static split on p95 TTFT).
+#
+# The two phases stress OPPOSITE resources:
+#   - prefill_heavy is a BURST of single-turn long-prompt sessions (4x the
+#     base arrival rate): prefill queueing dominates TTFT, while the tiny
+#     generations mean KV residency drains immediately — decode never
+#     becomes the bottleneck no matter how few decode workers remain.
+#   - decode_heavy is slow-arriving long-lived chat: trivial prompt work,
+#     but accumulated multi-turn KV saturates decode HBM, so TTFT degrades
+#     through deferred handoffs (B.2 backpressure) unless decode holds
+#     enough workers.
+DIURNAL_PHASES = {
+    # "daytime" ingest: burst of long cold prompts, terse answers
+    "prefill_heavy": {"system": 2048, "delta": 2048, "gen": 16, "turns": 1,
+                      "rate_scale": 8.0},
+    # "evening" chat: short deltas, long generations, long-lived KV
+    "decode_heavy":  {"system": 256,  "delta": 48,  "gen": 512, "turns": 3,
+                      "rate_scale": 0.75},
+}
+
+
+def make_diurnal_sessions(*, n_sessions: int, arrival_rate: float,
+                          n_models: int = 4, seed: int = 0,
+                          phases=("prefill_heavy", "decode_heavy"),
+                          phase_gap_s: float = 0.0) -> list[Session]:
+    """Two phases of ``n_sessions // 2`` Poisson arrivals each, the second
+    starting ``phase_gap_s`` after the first's arrivals end. Sessions run
+    much longer than their arrival (multi-turn), so a gap of roughly the
+    first phase's drain time is what makes the phases distinct REGIMES
+    rather than a blended mix — without it phase-A sessions keep issuing
+    prefill-heavy turns all through phase B. Every session keeps the
+    paper's all-agents-per-turn structure; only the token mix flips."""
+    rng = np.random.default_rng(seed)
+    half = n_sessions // 2
+    scales = [DIURNAL_PHASES[phases[0 if sid < half else 1]]
+              .get("rate_scale", 1.0) for sid in range(n_sessions)]
+    gaps = rng.exponential(1.0 / arrival_rate, size=n_sessions) / scales
+    arrivals = np.cumsum(gaps)
+    arrivals[half:] += phase_gap_s
+    sessions = []
+    for sid in range(n_sessions):
+        prof = DIURNAL_PHASES[phases[0] if sid < half else phases[1]]
+        invs = []
+        for _turn in range(prof["turns"]):
+            for agent in range(n_models):
+                invs.append(Invocation(
+                    model_id=agent,
+                    delta_tokens=prof["delta"],
+                    gen_tokens=prof["gen"]))
+        sessions.append(Session(sid=sid, arrival=float(arrivals[sid]),
+                                invocations=invs,
+                                system_tokens=prof["system"]))
+    return sessions

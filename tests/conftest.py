@@ -1,4 +1,23 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_xla_compile_state():
+    """Drop JAX's in-process executable caches between test modules.
+
+    The suite is one process compiling hundreds of toy-shape programs
+    across ~24 modules; on small (1-core CI) machines the accumulated
+    XLA/LLVM compiler state can segfault a late compile outright
+    (observed deterministically in backend_compile around the 200th
+    test). Modules build their own engines from their own toy configs,
+    so cross-module cache reuse — and therefore the recompile cost of
+    clearing — is negligible."""
+    yield
+    import jax
+
+    jax.clear_caches()

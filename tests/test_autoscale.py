@@ -1,0 +1,272 @@
+"""Autoscale policy (serving/autoscale.py): property tests against the pure
+``decide`` function (fuzzed invariants), time-domain guards on
+``Autoscaler``, and the simulator + engine integrations."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serving.autoscale import (AutoscaleConfig, AutoscaleSignals,
+                                     Autoscaler, ResizeDecision, decide)
+from repro.serving.simulator import ServingConfig, Simulator
+from repro.serving.workload import make_diurnal_sessions
+
+
+def _sig(rng, cfg):
+    n_prefill = int(rng.integers(cfg.min_prefill, cfg.max_prefill + 1))
+    n_decode = int(rng.integers(cfg.min_decode, cfg.max_decode + 1))
+    if cfg.total_budget is not None:    # a budgeted fleet never starts over
+        n_decode = max(cfg.min_decode,
+                       min(n_decode, cfg.total_budget - n_prefill))
+    return AutoscaleSignals(
+        prefill_backlog_tokens=int(rng.integers(0, 20_000)),
+        prefill_backlog_s=float(rng.exponential(0.5)),
+        decode_occupancy=float(rng.uniform(0, 1.5)),
+        free_page_frac=float(rng.uniform(0, 1)),
+        ttft_p95_s=(float("nan") if rng.random() < 0.2
+                    else float(rng.exponential(0.5))),
+        itl_p95_s=(float("nan") if rng.random() < 0.2
+                   else float(rng.exponential(0.05))),
+        n_prefill=n_prefill,
+        n_decode=n_decode,
+        inflight_decode=int(rng.integers(0, 2 * n_decode * cfg.decode_slots)))
+
+
+CONFIGS = [
+    AutoscaleConfig(),                                     # cloud-elastic
+    AutoscaleConfig(total_budget=8, min_prefill=2, max_prefill=6,
+                    min_decode=2, max_decode=6, decode_slots=16),
+    AutoscaleConfig(total_budget=4, min_prefill=1, max_prefill=3,
+                    min_decode=1, max_decode=3, ttft_target_s=0.2),
+]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS)
+def test_decide_invariants_fuzz(cfg):
+    """For any signal sample: at most one worker of movement per pool, the
+    [min, max] bands hold, decode never shrinks below in-flight demand, and
+    a budgeted fleet never exceeds its budget."""
+    rng = np.random.default_rng(0)
+    for _ in range(3000):
+        sig = _sig(rng, cfg)
+        d = decide(cfg, sig)
+        assert d.prefill_delta in (-1, 0, 1) and d.decode_delta in (-1, 0, 1)
+        n_pre = sig.n_prefill + d.prefill_delta
+        n_dec = sig.n_decode + d.decode_delta
+        assert cfg.min_prefill <= n_pre <= cfg.max_prefill
+        assert cfg.min_decode <= n_dec <= cfg.max_decode
+        if d.decode_delta < 0:       # never scale below in-flight demand
+            assert n_dec * cfg.decode_slots >= sig.inflight_decode
+        if cfg.total_budget is not None:
+            assert n_pre + n_dec <= cfg.total_budget
+            if sig.n_prefill + sig.n_decode == cfg.total_budget:
+                # at budget every move is a funded (+1,-1) shift
+                assert d.prefill_delta + d.decode_delta == 0
+
+
+def test_decide_pure_and_deterministic():
+    sig = AutoscaleSignals(5000, 2.0, 0.5, 0.5, 0.3, 0.02, 2, 2, 10)
+    cfg = AutoscaleConfig()
+    assert decide(cfg, sig) == decide(cfg, sig)
+
+
+def test_converges_under_constant_load():
+    """Closed loop against a synthetic plant: per-worker backlog scales
+    inversely with prefill workers, occupancy inversely with decode slots.
+    From any start the loop must reach a fixed point — and hold it (no
+    oscillation under constant signals)."""
+    cfg = AutoscaleConfig(min_prefill=1, max_prefill=8, min_decode=1,
+                          max_decode=8, decode_slots=16)
+
+    def plant(n_pre, n_dec):
+        demand = 48                                # constant decode demand
+        return AutoscaleSignals(
+            prefill_backlog_tokens=4000,
+            prefill_backlog_s=2.4,                  # 2.4s total backlog
+            decode_occupancy=demand / (n_dec * cfg.decode_slots),
+            free_page_frac=min(1.0, 0.25 * n_dec),
+            ttft_p95_s=0.5, itl_p95_s=0.02,
+            n_prefill=n_pre, n_decode=n_dec, inflight_decode=demand)
+
+    for start in ((1, 1), (8, 8), (1, 8), (8, 1)):
+        n_pre, n_dec = start
+        path = [(n_pre, n_dec)]
+        for _ in range(64):
+            d = decide(cfg, plant(n_pre, n_dec))
+            if not d:
+                break
+            n_pre += d.prefill_delta
+            n_dec += d.decode_delta
+            path.append((n_pre, n_dec))
+        fixed = (n_pre, n_dec)
+        # fixed point reached and HELD for a further 10 evaluations
+        for _ in range(10):
+            assert not decide(cfg, plant(*fixed)), (start, path)
+        # it resolved the pressure: backlog healthy band, occupancy < high
+        sig = plant(*fixed)
+        assert sig.prefill_backlog_s / fixed[0] <= cfg.backlog_high_s
+        assert sig.decode_occupancy < cfg.occupancy_high
+
+
+def test_budget_regime_fills_then_shifts():
+    cfg = AutoscaleConfig(total_budget=8, min_prefill=1, max_prefill=7,
+                          min_decode=1, max_decode=7, decode_slots=16)
+    idle = dict(prefill_backlog_tokens=0, prefill_backlog_s=0.0,
+                decode_occupancy=0.1, free_page_frac=0.9,
+                ttft_p95_s=float("nan"), itl_p95_s=float("nan"),
+                inflight_decode=0)
+    # under budget: grow (deploy idle hardware) even with no pressure
+    d = decide(cfg, AutoscaleSignals(n_prefill=2, n_decode=2, **idle))
+    assert d and d.prefill_delta + d.decode_delta == 1
+    # at budget, idle: hold — pure shrink never fires on a fixed fleet
+    assert not decide(cfg, AutoscaleSignals(n_prefill=4, n_decode=4, **idle))
+    # at budget, decode pressed: funded shift from prefill
+    pressed = dict(idle, decode_occupancy=0.95, free_page_frac=0.05)
+    d = decide(cfg, AutoscaleSignals(n_prefill=4, n_decode=4, **pressed))
+    assert (d.prefill_delta, d.decode_delta) == (-1, +1)
+    # at budget, prefill backlogged: funded shift from decode
+    backlogged = dict(idle, prefill_backlog_s=10.0)
+    d = decide(cfg, AutoscaleSignals(n_prefill=4, n_decode=4, **backlogged))
+    assert (d.prefill_delta, d.decode_delta) == (+1, -1)
+    # both pressed at budget: held (no thrash between the two shifts)
+    both = dict(pressed, prefill_backlog_s=10.0)
+    assert not decide(cfg, AutoscaleSignals(n_prefill=4, n_decode=4, **both))
+
+
+def test_ttft_attribution_nets_out_decode_itl():
+    """A decode-side ITL blowup inflates TTFT too; the policy must judge
+    prefill by TTFT net of the decode step, or it would shift workers in
+    exactly the wrong direction during decode stalls."""
+    cfg = AutoscaleConfig(total_budget=8, min_prefill=1, max_prefill=7,
+                          min_decode=1, max_decode=7, decode_slots=16,
+                          ttft_target_s=0.3)
+    # TTFT 2.0s, but 1.9s of it is one decode step: queue_ttft=0.1 < target,
+    # decode pressed -> the shift goes TOWARD decode
+    sig = AutoscaleSignals(prefill_backlog_tokens=10, prefill_backlog_s=0.01,
+                           decode_occupancy=0.95, free_page_frac=0.05,
+                           ttft_p95_s=2.0, itl_p95_s=1.9,
+                           n_prefill=4, n_decode=4, inflight_decode=40)
+    d = decide(cfg, sig)
+    assert (d.prefill_delta, d.decode_delta) == (-1, +1)
+
+
+def test_autoscaler_interval_and_cooldown():
+    cfg = AutoscaleConfig(interval_s=1.0, cooldown_intervals=2,
+                          shrink_patience=1)
+    sc = Autoscaler(cfg)
+    grow = AutoscaleSignals(0, 10.0, 0.5, 0.9, float("nan"), float("nan"),
+                            1, 1, 0)
+    d = sc.tick(grow, now=0.0)
+    assert d.prefill_delta == +1 and sc.decisions == [d]
+    # cooldown: (1 + cooldown_intervals) * interval_s = 3s hold
+    assert not sc.tick(grow, now=1.0)
+    assert not sc.tick(grow, now=2.9)
+    assert sc.tick(grow, now=3.0).prefill_delta == +1
+    # plain interval gate when nothing was applied
+    idle = AutoscaleSignals(0, 0.0, 0.5, 0.9, float("nan"), float("nan"),
+                            1, 1, 0)
+    sc2 = Autoscaler(AutoscaleConfig(interval_s=1.0, shrink_patience=1))
+    assert not sc2.tick(idle, now=0.0)
+    assert "interval" in sc2.tick(idle, now=0.5).reason
+
+
+def test_autoscaler_shrink_patience_debounce():
+    """Pure shrinks need shrink_patience consecutive votes; grows reset the
+    run (an instantaneous backlog sampled between bursts reads as idle)."""
+    cfg = AutoscaleConfig(interval_s=1.0, cooldown_intervals=0,
+                          shrink_patience=3)
+    sc = Autoscaler(cfg)
+    idle = AutoscaleSignals(0, 0.0, 0.05, 0.9, float("nan"), float("nan"),
+                            4, 1, 0)      # prefill idle -> shrink vote
+    assert "shrink vote" in sc.tick(idle, now=0.0).reason
+    assert "shrink vote" in sc.tick(idle, now=1.0).reason
+    d = sc.tick(idle, now=2.0)            # third consecutive vote applies
+    assert d.prefill_delta == -1
+    # a grow between votes resets the run
+    sc = Autoscaler(cfg)
+    grow = AutoscaleSignals(0, 10.0, 0.5, 0.9, float("nan"), float("nan"),
+                            1, 1, 0)
+    assert "shrink vote" in sc.tick(idle, now=0.0).reason
+    assert sc.tick(grow, now=1.0).prefill_delta == +1
+    assert "shrink vote" in sc.tick(idle, now=2.0).reason   # vote 1 again
+
+
+def test_resize_decision_bool():
+    assert not ResizeDecision()
+    assert ResizeDecision(prefill_delta=1)
+    assert ResizeDecision(decode_delta=-1)
+
+
+# ----------------------------------------------------------------------
+# simulator integration
+
+
+def test_simulator_autoscale_resizes_and_respects_budget():
+    """The diurnal scenario drives real resizes; every applied decision
+    keeps the fleet exactly at budget, and the split actually moves."""
+    cfg = get_config("internlm2-1.8b")
+    ac = AutoscaleConfig(min_prefill=2, max_prefill=6, min_decode=2,
+                         max_decode=6, decode_slots=24, total_budget=8,
+                         interval_s=0.25, cooldown_intervals=0,
+                         backlog_high_s=0.45, backlog_low_s=0.01,
+                         free_page_low=0.35)
+    sessions = make_diurnal_sessions(n_sessions=24, arrival_rate=5.0,
+                                     seed=0, phase_gap_s=8.0)
+    sc = ServingConfig(mode="prefillshare", n_prefill_workers=4,
+                       n_decode_workers=4, max_concurrent=96,
+                       chips_per_worker=1, hbm_per_worker=8e9,
+                       b2_policy="backpressure", prefill_chunk_tokens=256,
+                       max_decode_batch=16, autoscale=ac)
+    sim = Simulator(cfg, sc, sessions)
+    r = sim.run()
+    assert r["resize_events"] > 0
+    assert (r["final_prefill_workers"] + r["final_decode_workers"]
+            == ac.total_budget)
+    for d in sim.autoscaler.decisions:
+        assert d.prefill_delta + d.decode_delta == 0    # funded shifts only
+    assert math.isfinite(r["p95_ttft_s"])
+
+
+# ----------------------------------------------------------------------
+# real-engine integration
+
+
+def test_engine_autoscale_grows_prefill_pool_tokens_unchanged():
+    """Step-boundary wiring on the REAL engine: a long-prompt burst under an
+    aggressive config grows the prefill pool mid-run (new workers share the
+    page pool + radix tree and become routable immediately), applied moves
+    land on ``engine_autoscale_decisions_total`` — and the token streams are
+    bit-identical to a fixed-fleet run: elasticity changes capacity, never
+    the output."""
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models import init_params
+    from repro.serving.api import SamplingParams
+    from repro.serving.engine import LocalDisaggEngine
+
+    mcfg = ModelConfig(name="autoscale-eng", arch_type="dense", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                       vocab_size=64, dtype="float32")
+    params = init_params(mcfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    ctxs = [list(rng.integers(4, 60, size=48 + i)) for i in range(6)]
+
+    ac = AutoscaleConfig(interval_s=0.0, cooldown_intervals=0,
+                         backlog_high_s=1e-4, shrink_patience=10_000)
+    streams = []
+    for autoscale in (ac, None):
+        eng = LocalDisaggEngine(mcfg, params, num_pages=256, page_size=8,
+                                chunked=True, chunk_size=8, token_budget=32,
+                                autoscale=autoscale)
+        eng.models.register("m0", init_params(mcfg, jax.random.PRNGKey(7)))
+        outs = [eng.generate("m0", c, SamplingParams(max_tokens=4))
+                for c in ctxs]
+        eng.run()
+        streams.append([list(o.tokens) for o in outs])
+        if autoscale is not None:
+            assert len(eng.prefill_workers) > 1        # the pool actually grew
+            assert eng.router.n == len(eng.prefill_workers)
+            assert eng._autoscaler.decisions            # tick applied resizes
+            assert eng._c_autoscale.value >= 1
+    assert streams[0] == streams[1]
