@@ -1,0 +1,17 @@
+"""Serving-invariant static analyzer (stdlib-only; safe without jax).
+
+Usage: ``python -m repro.analysis src tests --baseline
+.analysis-baseline.json``. See docs/api.md "Static analysis & sanitizer"
+for the rule catalog (RPR001-RPR006) and baselining workflow.
+"""
+from repro.analysis.baseline import (apply_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.core import (Finding, ModuleContext, Rule, analyze_paths,
+                                 fingerprint_findings, iter_python_files,
+                                 parse_module)
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+__all__ = ["Finding", "ModuleContext", "Rule", "analyze_paths",
+           "fingerprint_findings", "iter_python_files", "parse_module",
+           "ALL_RULES", "RULES_BY_ID", "apply_baseline", "load_baseline",
+           "save_baseline"]

@@ -4,3 +4,5 @@ from repro.kvcache.manager import (Allocation, CacheManager, CacheStats,
                                    kv_bytes_per_token, state_bytes_per_seq)
 from repro.kvcache.paged import PagedKVPool
 from repro.kvcache.radix import NullPrefixIndex, PrefixIndex
+from repro.kvcache.sanitize import (PoolSanitizer, SanitizedKVPool,
+                                    SanitizerError, check_index, check_pool)

@@ -115,14 +115,16 @@ class CacheManager:
         bs = self.pool.block_size
         n_tok = len(tokens)
         cached_blocks, cached_tokens = self.index.match(tokens)
-        # take refs before any allocation can evict them
+        # take refs before any allocation can evict them; ANY failure after
+        # the ref (not just PoolExhausted) must give those refs back or the
+        # cached pages leak as permanently active
         self.pool.ref(cached_blocks)
-        self.pool.touch(cached_blocks)
-        n_blocks_total = (n_tok + bs - 1) // bs
-        need = n_blocks_total - len(cached_blocks)
         try:
+            self.pool.touch(cached_blocks)
+            n_blocks_total = (n_tok + bs - 1) // bs
+            need = n_blocks_total - len(cached_blocks)
             new_blocks = self.pool.alloc(need)
-        except PoolExhausted:
+        except BaseException:
             self.pool.unref(cached_blocks)
             raise
         self.stats.lookups += 1
@@ -141,7 +143,11 @@ class CacheManager:
         assert cached_tokens % self.pool.block_size == 0, \
             "prefix reuse is page-granular"
         self.pool.ref(cached_blocks)
-        self.pool.touch(cached_blocks)
+        try:
+            self.pool.touch(cached_blocks)
+        except BaseException:
+            self.pool.unref(cached_blocks)
+            raise
         self.stats.lookups += 1
         self.stats.hit_tokens += cached_tokens
         self.stats.total_tokens += len(tokens)
@@ -154,7 +160,11 @@ class CacheManager:
         if n_pages <= 0:
             return []
         new = self.pool.alloc(n_pages)
-        alloc.new_blocks.extend(new)
+        try:
+            alloc.new_blocks.extend(new)
+        except BaseException:
+            self.pool.drop(new)
+            raise
         return new
 
     def commit(self, tokens, alloc: Allocation) -> None:

@@ -1,0 +1,309 @@
+"""KV-pool sanitizer: the runtime half of the analysis story.
+
+The static rules (repro.analysis) prove discipline at call sites; this
+module checks the STATE those disciplines are supposed to preserve, at every
+scheduler step boundary (``LocalDisaggEngine(..., sanitize=True)``):
+
+- pool conservation: every page id is in exactly one of FREE / CACHED /
+  ACTIVE, and the three populations sum to the pool capacity;
+- refcount cross-check: for every page, the pool's refcount equals the
+  number of holders the engine's own structures claim — prefill-session
+  allocations, in-flight chunked requests (their allocation, or the sibling
+  pin), and decode sequences' shared/private block tables;
+- sentinel hygiene: page 0 (the never-allocated padding sentinel) appears
+  in no live block table;
+- radix↔pool consistency: every block the prefix index can serve a match
+  from is resident (active or LRU-cached), never free;
+- donation poisoning: ``SanitizedKVPool`` replaces the leaves of every
+  previously handed-out ``decode_state``/``make_decode_cache`` pytree with
+  ``_PoisonedBuffer`` the moment the paired absorb lands — a read through a
+  stale handle (which on TPU would be use-after-donation of a dead buffer)
+  raises ``SanitizerError`` immediately, instead of silently reading valid
+  memory on backends where donation is a no-op.
+
+Checks never mutate pool or engine state and run entirely on the host, so a
+``sanitize=True`` run is token-bit-identical to ``sanitize=False``
+(asserted in tests/test_sanitizer.py).
+"""
+from __future__ import annotations
+
+from repro.kvcache.paged import PagedKVPool
+
+
+class SanitizerError(AssertionError):
+    """A serving invariant was violated (diagnostics in the message)."""
+
+
+def _fail(msg: str):
+    raise SanitizerError(msg)
+
+
+# ----------------------------------------------------------------------
+# standalone checkers (usable from property tests without an engine)
+# ----------------------------------------------------------------------
+
+def check_pool(pool) -> None:
+    """Raising version of ``BlockPool.check_invariants`` with precise
+    diagnostics: every page in exactly one state, populations conserved."""
+    free = set(pool._free)
+    cached = set(pool._cached)
+    if len(free) != len(pool._free):
+        _fail(f"pool free list holds duplicate ids: {sorted(pool._free)}")
+    both = free & cached
+    if both:
+        _fail(f"pages {sorted(both)} are simultaneously FREE and CACHED")
+    if pool.SENTINEL in free or pool.SENTINEL in cached:
+        _fail("sentinel page 0 entered the free/cached population — "
+              "something allocated or released the padding page")
+    active = 0
+    for bid in range(1, pool.num_blocks + 1):
+        rc = pool._refcount[bid]
+        if rc < 0:
+            _fail(f"page {bid} refcount is negative ({rc}): over-released")
+        in_free, in_cached = bid in free, bid in cached
+        if rc > 0:
+            if in_free or in_cached:
+                _fail(f"page {bid} is ACTIVE (refcount {rc}) but also in "
+                      f"the {'free' if in_free else 'cached'} population")
+            active += 1
+        elif not (in_free or in_cached):
+            _fail(f"page {bid} is in no state: refcount 0, not free, "
+                  f"not cached (leaked out of the pool)")
+        elif in_cached and rc != 0:
+            _fail(f"CACHED page {bid} has refcount {rc} (must be 0)")
+    if len(free) + len(cached) + active != pool.num_blocks:
+        _fail(f"pool conservation broken: {len(free)} free + {len(cached)} "
+              f"cached + {active} active != {pool.num_blocks} total")
+    if pool._refcount[pool.SENTINEL] != 0:
+        _fail(f"sentinel page 0 has refcount "
+              f"{pool._refcount[pool.SENTINEL]} — it must never be held")
+
+
+def check_index(index, pool=None) -> None:
+    """Radix-tree structural invariants, plus (with ``pool``) residency:
+    every block the index can serve a match from must be active or cached,
+    never free — a free page's KV is about to be overwritten."""
+    if index is None or not hasattr(index, "_by_block"):
+        return                       # NullPrefixIndex / disabled
+    for bid, node in index._by_block.items():
+        if node.block_id != bid:
+            _fail(f"index entry for block {bid} points at node carrying "
+                  f"block {node.block_id}")
+        if node.parent is None:
+            _fail(f"index node for block {bid} has no parent (detached "
+                  f"from the tree but still matchable)")
+        if node.parent.children.get(node.key) is not node:
+            _fail(f"index node for block {bid} is not linked from its "
+                  f"parent — match() and _by_block disagree")
+        p = node.parent
+        while p is not index.root:
+            if p.block_id not in index._by_block:
+                _fail(f"block {bid} has unregistered ancestor block "
+                      f"{p.block_id}: an orphan chain survived eviction")
+            p = p.parent
+        if pool is not None:
+            if bid == pool.SENTINEL:
+                _fail("prefix index holds the sentinel page 0")
+            if pool._refcount[bid] == 0 and bid not in pool._cached:
+                _fail(f"prefix index can serve block {bid} but the pool "
+                      f"has it FREE — matches would alias recycled KV")
+
+
+# ----------------------------------------------------------------------
+# donation poisoning
+# ----------------------------------------------------------------------
+
+class _PoisonedBuffer:
+    """Stand-in for a donated page buffer: any read raises. Emulates, on
+    every backend, the TPU reality that a donated buffer is dead after the
+    jitted step it was donated into."""
+
+    __slots__ = ("_why",)
+
+    def __init__(self, why: str):
+        object.__setattr__(self, "_why", why)
+
+    def _trap(self, op: str):
+        raise SanitizerError(
+            f"use-after-donation: {op} on a page buffer that was donated "
+            f"into {object.__getattribute__(self, '_why')} — re-fetch state "
+            f"via decode_state()/make_decode_cache() after every absorb")
+
+    def __getattr__(self, name):
+        self._trap(f"attribute access .{name}")
+
+    def __getitem__(self, item):
+        self._trap(f"indexing [{item!r}]")
+
+    def __iter__(self):
+        self._trap("iteration")
+
+    def __len__(self):
+        self._trap("len()")
+
+    def __bool__(self):
+        self._trap("bool()")
+
+    def __array__(self, *a, **k):
+        self._trap("conversion to array")
+
+    def __add__(self, other):
+        self._trap("arithmetic")
+
+    __radd__ = __mul__ = __rmul__ = __sub__ = __rsub__ = __add__
+
+    def __repr__(self):
+        return "<poisoned donated buffer>"
+
+
+def _poison_tree(obj, why: str) -> None:
+    """Replace every array leaf in a handed-out state pytree with a trap,
+    mutating the containers in place (the caller's references see it)."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if isinstance(v, (dict, list)):
+                _poison_tree(v, why)
+            elif not isinstance(v, _PoisonedBuffer):
+                obj[k] = _PoisonedBuffer(why)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            if isinstance(v, (dict, list)):
+                _poison_tree(v, why)
+            elif not isinstance(v, _PoisonedBuffer):
+                obj[i] = _PoisonedBuffer(why)
+
+
+class SanitizedKVPool(PagedKVPool):
+    """PagedKVPool that tracks handed-out decode-state pytrees and poisons
+    them the moment the paired absorb retires them. The arrays returned are
+    the same objects the base class returns, so token streams are
+    bit-identical — only reads through STALE handles change behavior."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._outstanding: list = []     # handed-out state/cache pytrees
+
+    def _retire(self, why: str) -> None:
+        for tree in self._outstanding:
+            _poison_tree(tree, why)
+        self._outstanding.clear()
+
+    def decode_state(self):
+        state = super().decode_state()
+        self._outstanding.append(state)
+        return state
+
+    def absorb_decode_state(self, state) -> None:
+        # the absorbed tree is the step's LIVE return value — never poison
+        # it, even if a caller round-trips the handed-out dict unchanged
+        self._outstanding = [t for t in self._outstanding if t is not state]
+        self._retire("a donated decode step (absorb_decode_state)")
+        super().absorb_decode_state(state)
+
+    def make_decode_cache(self, block_tables, state=None):
+        cache = super().make_decode_cache(block_tables, state)
+        self._outstanding.append(cache)
+        return cache
+
+    def absorb_decode_cache(self, new_cache) -> None:
+        self._outstanding = [t for t in self._outstanding
+                             if t is not new_cache]
+        self._retire("a donated decode step (absorb_decode_cache)")
+        super().absorb_decode_cache(new_cache)
+
+    def copy_page(self, src: int, dst: int) -> None:
+        # the CoW clone donates the whole pool pytree on TPU: any state
+        # handed out before it is dead afterwards too
+        self._retire("copy_page's donated pool update")
+        super().copy_page(src, dst)
+
+
+# ----------------------------------------------------------------------
+# engine-level step-boundary checker
+# ----------------------------------------------------------------------
+
+class PoolSanitizer:
+    """Cross-checks the pool's refcounts against the holders the engine's
+    own structures claim, at every scheduler step boundary."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.checks = 0          # step boundaries validated (test hook)
+
+    # -- holder census --------------------------------------------------
+    def _expected_refcounts(self) -> dict[int, list[str]]:
+        """page id -> list of holder descriptions (one entry per expected
+        reference), from prefill sessions, in-flight chunked requests, and
+        active decode sequences."""
+        eng = self.engine
+        holders: dict[int, list[str]] = {}
+
+        def hold(bid: int, who: str):
+            holders.setdefault(bid, []).append(who)
+
+        seen_allocs: set[int] = set()
+        for w in eng.prefill_workers:
+            for sid, sc in getattr(w, "sessions", {}).items():
+                alloc = getattr(sc, "alloc", None)
+                if alloc is None or id(alloc) in seen_allocs:
+                    continue
+                seen_allocs.add(id(alloc))
+                for bid in alloc.blocks:
+                    hold(bid, f"session {sid} (worker {w.wid})")
+        sched = eng.scheduler
+        for r in sched.prefilling:
+            if r.sibling_bt is not None:
+                for bid in r.sibling_bt:
+                    hold(bid, f"request {r.rid} sibling pin")
+            elif r.alloc is not None and id(r.alloc) not in seen_allocs:
+                # after _commit_request the SAME Allocation object lives in
+                # the session (counted above) — only count it once
+                seen_allocs.add(id(r.alloc))
+                for bid in r.alloc.blocks:
+                    hold(bid, f"request {r.rid} in-flight allocation")
+        for s in sched.active:
+            for bid in s.shared_blocks:
+                hold(bid, f"decode seq rid={s.rid} shared")
+            for bid in s.private_blocks:
+                hold(bid, f"decode seq rid={s.rid} private")
+        return holders
+
+    # -- checks ----------------------------------------------------------
+    def _live_tables(self):
+        eng = self.engine
+        for w in eng.prefill_workers:
+            for sid, sc in getattr(w, "sessions", {}).items():
+                bt = getattr(sc, "block_table", None)
+                if bt is not None:
+                    yield f"session {sid} (worker {w.wid})", bt
+        for r in eng.scheduler.prefilling:
+            if r.sibling_bt is not None:
+                yield f"request {r.rid} sibling table", r.sibling_bt
+            elif r.block_table:
+                yield f"request {r.rid} prefill table", r.block_table
+        for s in eng.scheduler.active:
+            yield f"decode seq rid={s.rid}", s.block_table
+
+    def check_step(self) -> None:
+        eng = self.engine
+        pool = eng.block_pool
+        check_pool(pool)
+        check_index(eng.prefix_index, pool)
+        for who, bt in self._live_tables():
+            if pool.SENTINEL in bt:
+                _fail(f"sentinel page 0 appears in the live block table of "
+                      f"{who}: {bt} — padding leaked into ownership")
+        holders = self._expected_refcounts()
+        for bid, who in sorted(holders.items()):
+            rc = pool._refcount[bid]
+            if rc != len(who):
+                _fail(f"refcount mismatch on page {bid}: pool says {rc}, "
+                      f"engine structures hold {len(who)} reference(s) "
+                      f"({'; '.join(who)})")
+        for bid in range(1, pool.num_blocks + 1):
+            rc = pool._refcount[bid]
+            if rc > 0 and bid not in holders:
+                _fail(f"page {bid} is ACTIVE (refcount {rc}) but NO engine "
+                      f"structure holds it — a leaked reference (missing "
+                      f"unref/drop on some exit path)")
+        self.checks += 1

@@ -97,12 +97,14 @@ from repro.kvcache.handoff import HandoffChannel, transfer_cache
 from repro.kvcache.manager import CacheManager, CacheStats
 from repro.kvcache.paged import PagedKVPool
 from repro.kvcache.radix import NullPrefixIndex, PrefixIndex
+from repro.kvcache.sanitize import PoolSanitizer, SanitizedKVPool
 from repro.models import forward
 from repro.serving.api import (FINISH_ABORT, FINISH_LENGTH, RequestOutput,
                                SamplingParams, SharedContext)
 from repro.serving.autoscale import Autoscaler
 from repro.serving.backpressure import ThroughputEWMA
-from repro.serving.decode import FusedDecodePlane, sampling_arrays
+from repro.serving.decode import (FusedDecodePlane, next_pow2,
+                                  sampling_arrays)
 from repro.serving.metrics import (SPAN_FIRST_TOKEN, SPAN_HANDOFF,
                                    SPAN_ROUTED, SPAN_TOKEN, MetricsRegistry)
 from repro.serving.registry import ModelRegistry, as_spec
@@ -311,14 +313,20 @@ class PrefillWorker:
         alloc = self.mgr.acquire(tokens)
         n_cached = alloc.cached_tokens
         bt = list(alloc.blocks)
-        if n_cached < n:
-            new = jnp.asarray(tokens[n_cached:], jnp.int32)[None]
-            t0 = time.perf_counter()
-            out = base_prefill_paged(self.cfg, self.base_params, new,
-                                     pool=self.kvpool, block_table=bt,
-                                     n_cached=n_cached)
-            jax.block_until_ready(out)
-            self.ewma.observe(n - n_cached, time.perf_counter() - t0)
+        try:
+            if n_cached < n:
+                new = jnp.asarray(tokens[n_cached:], jnp.int32)[None]
+                t0 = time.perf_counter()
+                out = base_prefill_paged(self.cfg, self.base_params, new,
+                                         pool=self.kvpool, block_table=bt,
+                                         n_cached=n_cached)
+                jax.block_until_ready(out)
+                self.ewma.observe(n - n_cached, time.perf_counter() - t0)
+        except BaseException:
+            # nothing was committed: tail pages hold partial KV and must be
+            # hard-freed, cached prefix refs go back (RPR002 discipline)
+            self.mgr.abandon(alloc)
+            raise
         self.mgr.commit(tokens, alloc)
         if sc is not None:
             self.mgr.release(sc.alloc)     # swap, don't drop: new alloc holds
@@ -362,27 +370,33 @@ class DensePrefillWorker:
         alloc = self.mgr.acquire(tokens.tolist())      # block-level metrics
         self.mgr.commit(tokens.tolist(), alloc)
         t0 = time.perf_counter()
-        if sc is None:
-            _, cache = base_prefill(
-                self.cfg, self.base_params, jnp.asarray(tokens)[None],
-                cache_len=max(self.capacity, n))
-            jax.block_until_ready(cache)
-            self.ewma.observe(n, time.perf_counter() - t0)
-            new = SessionCache(cache, n, max(self.capacity, n), alloc)
-            self.stats.prefill_tokens_computed += n
-        else:
-            assert n > sc.n_tokens, "context is append-only"
-            fresh = tokens[sc.n_tokens:]
-            _, cache = base_prefill(
-                self.cfg, self.base_params, jnp.asarray(fresh)[None],
-                cache_len=sc.capacity, cache=sc.cache,
-                pos=jnp.array([sc.n_tokens], jnp.int32))
-            jax.block_until_ready(cache)
-            self.ewma.observe(len(fresh), time.perf_counter() - t0)
-            self.stats.prefill_tokens_computed += len(fresh)
-            self.stats.prefill_tokens_reused += sc.n_tokens
-            self.mgr.release(sc.alloc)
-            new = SessionCache(cache, n, sc.capacity, alloc)
+        try:
+            if sc is None:
+                _, cache = base_prefill(
+                    self.cfg, self.base_params, jnp.asarray(tokens)[None],
+                    cache_len=max(self.capacity, n))
+                jax.block_until_ready(cache)
+                self.ewma.observe(n, time.perf_counter() - t0)
+                new = SessionCache(cache, n, max(self.capacity, n), alloc)
+                self.stats.prefill_tokens_computed += n
+            else:
+                assert n > sc.n_tokens, "context is append-only"
+                fresh = tokens[sc.n_tokens:]
+                _, cache = base_prefill(
+                    self.cfg, self.base_params, jnp.asarray(fresh)[None],
+                    cache_len=sc.capacity, cache=sc.cache,
+                    pos=jnp.array([sc.n_tokens], jnp.int32))
+                jax.block_until_ready(cache)
+                self.ewma.observe(len(fresh), time.perf_counter() - t0)
+                self.stats.prefill_tokens_computed += len(fresh)
+                self.stats.prefill_tokens_reused += sc.n_tokens
+                self.mgr.release(sc.alloc)
+                new = SessionCache(cache, n, sc.capacity, alloc)
+        except BaseException:
+            # already committed above, so the pages are published: release
+            # (-> CACHED) rather than abandon, mirroring end_session
+            self.mgr.release(alloc)
+            raise
         self.sessions[sid] = new
         self.backlog_s += n * self.ewma.s_per_token
         return new
@@ -508,7 +522,8 @@ class LocalDisaggEngine:
                  chunked: bool = False, token_budget: int = 256,
                  chunk_size: int = 64, sched_policy: str = "fcfs",
                  fused: bool | None = None, prefix_cache: bool = True,
-                 metrics: bool = True, autoscale=None):
+                 metrics: bool = True, autoscale=None,
+                 sanitize: bool = False):
         self.cfg = cfg
         self.base_params = base_params
         self.page_size = page_size
@@ -530,9 +545,17 @@ class LocalDisaggEngine:
         self.handoff = HandoffChannel(cfg)
         self.router = PrefillRouter(n_prefill_workers, router_policy)
         self.prefix_cache = prefix_cache
+        if sanitize and not self.paged:
+            raise ValueError("sanitize=True requires the paged KV plane "
+                             "(the sanitizer checks page refcounts)")
         if self.paged:
             self.block_pool = BlockPool(num_pages, page_size)
-            self.kvpool = PagedKVPool(cfg, num_pages, page_size)
+            # sanitize=True swaps in the poisoning pool subclass and a
+            # step-boundary invariant checker (repro.kvcache.sanitize);
+            # token streams stay bit-identical — checks never mutate state
+            self.kvpool = (SanitizedKVPool(cfg, num_pages, page_size)
+                           if sanitize
+                           else PagedKVPool(cfg, num_pages, page_size))
             # automatic prefix caching: ONE engine-global radix tree over the
             # shared pool, shared by every worker's CacheManager — its
             # eviction callback is registered exactly once, here, and fans
@@ -575,6 +598,9 @@ class LocalDisaggEngine:
             self, SchedulerConfig(token_budget=token_budget,
                                   chunk_size=chunk_size,
                                   policy=sched_policy))
+        #: step-boundary invariant checker (None unless sanitize=True);
+        #: the scheduler calls sanitizer.check_step() after every step
+        self.sanitizer = PoolSanitizer(self) if sanitize else None
         # model lifecycle: the decode-model set lives in the registry
         # (engine.models) and is mutable while serving — register/unregister
         # take effect for new requests immediately and relayout the fused
@@ -1250,7 +1276,9 @@ class LocalDisaggEngine:
         returns the sampled next tokens aligned with ``seqs``.
         ``decode_step`` owns all bookkeeping and has already grown the tail
         pages for the whole batch."""
-        npages = max(len(s.block_table) for s in seqs)
+        # pow2-bucket the table width: the padded columns are masked by pos,
+        # so this is token-identical while bounding jit retraces at O(log)
+        npages = next_pow2(max(len(s.block_table) for s in seqs))
         bt = np.zeros((len(seqs), npages), np.int32)
         for i, s in enumerate(seqs):
             bt[i, :len(s.block_table)] = s.block_table

@@ -159,6 +159,10 @@ class ChunkedScheduler:
         progress += self._run_chunks(chunks)
         progress += self._promote()
         progress += self._decode_phase()
+        if self.engine.sanitizer is not None:
+            # step boundary: every transient ref/alloc has settled, so the
+            # pool/index/holder cross-check must hold exactly here
+            self.engine.sanitizer.check_step()
         if progress == 0 and (self.waiting or self.prefilling):
             if self.engine.sched_reserve_extra > 0:
                 # the autoscaler's extra decode headroom is advisory — it

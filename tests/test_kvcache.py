@@ -7,6 +7,7 @@ from hypothesis import given, settings
 
 from repro.configs import get_config
 from repro.kvcache import (BlockPool, CacheManager, PoolExhausted, PrefixIndex)
+from repro.kvcache.sanitize import check_pool
 
 CFG = get_config("llama31-8b")
 
@@ -70,6 +71,7 @@ def test_pool_invariants_random_ops(ops):
         elif op == "touch" and cached:
             p.touch(cached[n % len(cached)])
         p.check_invariants()
+        check_pool(p)     # sanitizer's raising checker composes with fuzzing
 
 
 # ----------------------------------------------------------------------

@@ -13,6 +13,7 @@ pytest.importorskip("hypothesis", reason="optional dep: property tests only")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kvcache.radix import PrefixIndex  # noqa: E402
+from repro.kvcache.sanitize import check_index  # noqa: E402
 
 BS = 4
 
@@ -85,6 +86,7 @@ def test_random_interleavings_hold_invariants(ops):
             assert not (set(leaves) & evicted)
             assert all(idx._by_block[b].is_leaf for b in leaves)
         idx.check_invariants()
+        check_index(idx)  # sanitizer's raising checker composes with fuzzing
         assert len(idx) == len(chains)
 
 
