@@ -1,0 +1,193 @@
+"""Relay-KV chain A/B: producer->consumer pipelines with decode-KV reuse.
+
+Workload: N independent two-stage chains, the paper's agent-pipeline
+pattern. Per chain, a PRODUCER model generates G tokens from a fresh
+prompt, then a CONSUMER model (a different registered model id) is prompted
+with ``producer_prompt ++ [first_token] ++ producer_output`` — exactly the
+stream the engine publishes at finish. Two engines, identical everything,
+except:
+
+  relay_on  — the default: the producer's decode-written pages are adopted
+              into the engine-global radix tree at finish, so the consumer's
+              prefill starts past the producer's ENTIRE output with a
+              zero-copy block-table reference (only the joiner token and
+              the sub-page tail are cold).
+  relay_off — ``relay=False``: the prefix cache still serves the producer's
+              PROMPT pages (published at prefill commit), but every
+              generated token is re-prefilled from scratch. The A/B delta
+              is therefore precisely the decode-KV relay, not prefix
+              caching at large.
+
+Latency is the consumer's TTFT from the streaming ``RequestOutput``
+(token-push timestamps, what a client observes). Gates: consumer token
+streams bit-identical across modes, relayed-token fraction of the
+shareable (generated) portion > 0.5, and — full bench only — consumer p95
+TTFT >= 1.5x lower with relay on.
+
+Usage: PYTHONPATH=src python -m benchmarks.relay_chain_bench
+       PYTHONPATH=src python benchmarks/relay_chain_bench.py --smoke
+       ... [--json PATH]   # write BENCH_serving.json (see bench_json.py)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+try:
+    from bench_json import gate, write_bench_json
+except ImportError:
+    from benchmarks.bench_json import gate, write_bench_json
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params
+from repro.serving.api import SamplingParams
+from repro.serving.engine import LocalDisaggEngine
+
+CFG = ModelConfig(name="relay-bench", arch_type="dense", n_layers=3,
+                  d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab_size=64, dtype="float32")
+
+PAGE = 16
+CHAINS = 8
+PROMPT_LEN = 64           # page-aligned so the relay share is exactly G
+GEN_A = 96                # producer output: the shareable portion
+GEN_B = 8
+
+
+def _pct(xs, q):
+    xs = [x for x in xs if x is not None]
+    return 1e3 * float(np.percentile(xs, q)) if len(xs) else float("nan")
+
+
+def _prompts(seed: int, chains: int, prompt_len: int):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(4, 60, size=prompt_len)) for _ in range(chains)]
+
+
+def _drive(eng: LocalDisaggEngine, prompts, gen_a: int, gen_b: int):
+    """Run the chains sequentially; returns ((a_tokens, b_tokens) per chain,
+    consumer TTFTs, wall seconds, hit-token stats consumed by the WARMUP).
+    The consumer prompt is built from the producer's actual output, so
+    relay_on/relay_off drive byte-identical workloads as long as the
+    streams agree (asserted by the caller). Warmup is one full throwaway
+    chain with the measured lengths, so every chunk/decode shape is
+    compiled before the clock starts; its hits are snapshotted and
+    subtracted by the caller."""
+    warm_p = [int(t) for t in
+              np.random.default_rng(997).integers(4, 60, size=len(prompts[0]))]
+    wa = eng.generate("planner", warm_p, SamplingParams(max_tokens=gen_a))
+    eng.run()
+    eng.generate("executor", warm_p + [2] + [int(t) for t in wa.tokens],
+                 SamplingParams(max_tokens=gen_b))
+    eng.run()
+    s0 = eng.stats()
+    warm_hits = {k: s0[k] for k in ("relay_hit_tokens", "prefix_hit_tokens")}
+
+    streams, ttfts = [], []
+    t0 = time.perf_counter()
+    for p in prompts:
+        a = eng.generate("planner", p, SamplingParams(max_tokens=gen_a))
+        eng.run()
+        b_prompt = list(p) + [2] + [int(t) for t in a.tokens]
+        b = eng.generate("executor", b_prompt,
+                         SamplingParams(max_tokens=gen_b))
+        eng.run()
+        assert a.finished and b.finished
+        streams.append((list(a.tokens), list(b.tokens)))
+        ttfts.append(b.ttft)
+    wall = time.perf_counter() - t0
+    return streams, ttfts, wall, warm_hits
+
+
+def chain_ab(chains: int = CHAINS, prompt_len: int = PROMPT_LEN,
+             gen_a: int = GEN_A, gen_b: int = GEN_B, chunk: int = 32,
+             budget: int = 64, seed: int = 0, gate_ttft: bool = True):
+    base = init_params(CFG, jax.random.PRNGKey(0))
+    prompts = _prompts(seed, chains, prompt_len)
+
+    rows, all_streams = [], []
+    for mode, on in (("relay_on", True), ("relay_off", False)):
+        eng = LocalDisaggEngine(CFG, base, num_pages=512, page_size=PAGE,
+                                chunked=True, chunk_size=chunk,
+                                token_budget=budget, relay=on)
+        # two DISTINCT model ids sharing the base KV path: the reuse below
+        # is cross-model, the producer never serves the consumer's request
+        eng.models.register("planner", base)
+        eng.models.register("executor", base)
+        streams, ttfts, wall, warm = _drive(eng, prompts, gen_a, gen_b)
+        s = eng.stats()
+        relay_hits = s["relay_hit_tokens"] - warm["relay_hit_tokens"]
+        prefix_hits = s["prefix_hit_tokens"] - warm["prefix_hit_tokens"]
+        gen_total = sum(len(a) + len(b) for a, b in streams)
+        rows.append({
+            "mode": mode,
+            "ttft_p95_ms": _pct(ttfts, 95),
+            "ttft_p50_ms": _pct(ttfts, 50),
+            "relay_hit_tokens": relay_hits,
+            "relayed_fraction": relay_hits / (chains * gen_a),
+            "relay_pages_published": s["relay_pages_published"],
+            "prefix_hit_tokens": prefix_hits,
+            "tok_s": gen_total / wall,
+            "chain_wall_s": wall,
+        })
+        all_streams.append(streams)
+
+    cols = ["mode", "ttft_p95_ms", "ttft_p50_ms", "relay_hit_tokens",
+            "relayed_fraction", "relay_pages_published", "prefix_hit_tokens",
+            "tok_s", "chain_wall_s"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.2f}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+
+    on_row, off_row = rows
+    assert all_streams[0] == all_streams[1], \
+        "relay changed tokens — decode-KV reuse must be bit-identical"
+    assert on_row["relayed_fraction"] > 0.5, on_row
+    assert off_row["relay_hit_tokens"] == 0
+    assert off_row["prefix_hit_tokens"] > 0, \
+        "A/B baseline must still have plain prefix caching on"
+    speed = off_row["ttft_p95_ms"] / on_row["ttft_p95_ms"]
+    print(f"# {chains} chains x (prompt {prompt_len} -> produce {gen_a} -> "
+          f"consume): consumer p95 TTFT {off_row['ttft_p95_ms']:.2f}ms "
+          f"relay_off -> {on_row['ttft_p95_ms']:.2f}ms relay_on "
+          f"({speed:.2f}x lower), relayed fraction "
+          f"{on_row['relayed_fraction']:.2f} of the producers' output, "
+          f"outputs bit-identical")
+    if gate_ttft:
+        assert speed >= 1.5, (
+            f"relay did not lower consumer p95 TTFT >= 1.5x ({speed:.2f}x)")
+    return rows, speed
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--budget", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 3 short chains (asserts relayed "
+                         "fraction > 0.5 and bit-identical outputs; the "
+                         "TTFT gate is reserved for the full bench)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serving.json here")
+    args = ap.parse_args()
+    if args.smoke:
+        rows, speed = chain_ab(chains=3, prompt_len=32, gen_a=32, gen_b=4,
+                               chunk=16, budget=32, gate_ttft=False)
+        if args.json:
+            write_bench_json(args.json, "relay_chain_smoke", rows, gates={
+                "relayed_fraction": gate(rows[0]["relayed_fraction"], 0.5),
+            })
+        sys.exit(0)
+    rows, speed = chain_ab(chunk=args.chunk, budget=args.budget)
+    if args.json:
+        write_bench_json(args.json, "relay_chain", rows, gates={
+            "consumer_ttft_p95_speedup": gate(speed, 1.5),
+            "relayed_fraction": gate(rows[0]["relayed_fraction"], 0.5),
+        })

@@ -13,6 +13,14 @@ for the rationale catalog):
   (``alloc``/``ref``/``acquire``/``begin``/``extend``) and then performs
   fallible work with no ``unref``/``drop``/``release``/``abandon`` on any
   exception path: one raise and the pages leak as permanently-active.
+  Relay-KV note: relay publication (``_finish``/``_relay_publish``) is a
+  RELEASE-side discipline the AST rule cannot see — every page the tree
+  adopts must be ``unref``'d to CACHED (never left ACTIVE, never ``drop``'d
+  out from under the tree) in the same ``_finish``, and non-adopted private
+  pages must still be hard-dropped. The runtime half enforces it: the
+  PoolSanitizer's step census treats relay-published pages as first-class
+  (an ACTIVE holderless relay page is diagnosed by name) and
+  ``check_index`` rejects a tree that serves a FREE page.
 - RPR003 host-sync-in-hot-path — ``block_until_ready``/``np.asarray``/
   ``.item()``/``float(x[i])`` inside scheduler/decode step loops serializes
   the device pipeline per step (or worse, per token).

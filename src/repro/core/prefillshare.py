@@ -76,6 +76,13 @@ def base_prefill_paged(cfg: ModelConfig, base_params: Params, new_tokens, *,
     over ``new_tokens`` only; the freshly produced KV rows are scattered back
     into the pool's physical pages with the ``paged_write`` kernel. Returns
     the last-token logits. B=1 (one request per call).
+
+    Mixed-provenance contract: the cached pages may be prefill-published OR
+    relay-published (decode-written by a finished sequence whose KV path
+    equals the base module's — ``engine._relay_compatible`` gates
+    publication). Both hold position p's KV for the token INPUT at p, bit-
+    identical to what this function would itself have written, so the
+    gather treats them uniformly; no provenance plumbing reaches here.
     """
     assert n_cached % pool.page_size == 0, "prefix reuse is page-granular"
     cache = pool.gather_prefill_cache(block_table, n_cached)
@@ -115,9 +122,12 @@ def base_prefill_chunk(cfg: ModelConfig, base_params: Params, tokens, *,
     inside one jitted forward, each layer scatters the chunk's fresh K/V
     rows into their pool pages and the chunk queries attend to prefix+self
     straight from the pages (``flash_prefill_paged`` on TPU, the jnp gather
-    twin elsewhere). Batches chunks from several requests: ``tokens``
-    (B, S) int32, ``pos`` (B,) absolute start positions, ``block_tables``
-    (B, npages) zero-padded to a common width. Chunk start positions and
+    twin elsewhere). The prefix pages obey the same mixed-provenance
+    contract as ``base_prefill_paged``: prefill-published and
+    relay-published (decode-written) pages are indistinguishable here.
+    Batches chunks from several requests: ``tokens`` (B, S) int32, ``pos``
+    (B,) absolute start positions, ``block_tables`` (B, npages) zero-padded
+    to a common width. Chunk start positions and
     the cached-prefix boundary may land mid-page. Returns the updated-page
     pytree (already absorbed into ``pool``) for completion sync.
     """

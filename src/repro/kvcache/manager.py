@@ -48,6 +48,8 @@ class CacheStats:
     lookups: int = 0
     hit_tokens: int = 0
     total_tokens: int = 0
+    relay_hit_tokens: int = 0    # subset of hit_tokens served from pages the
+                                 # DECODE plane wrote (relay-published KV)
 
     @property
     def hit_ratio(self) -> float:
@@ -57,12 +59,15 @@ class CacheStats:
     def merge(cls, stats) -> "CacheStats":
         """Roll per-worker hit accounting up into ONE fleet-wide surface.
         Engine (``engine.stats()``) and simulator (``summary()``) both report
-        through this, so 'hit ratio' means the same number everywhere."""
+        through this, so 'hit ratio' means the same number everywhere —
+        including the relay share (decode-published pages), so fleet
+        dashboards see cache occupancy and hits from BOTH provenances."""
         out = cls()
         for s in stats:
             out.lookups += s.lookups
             out.hit_tokens += s.hit_tokens
             out.total_tokens += s.total_tokens
+            out.relay_hit_tokens += getattr(s, "relay_hit_tokens", 0)
         return out
 
 
@@ -130,6 +135,7 @@ class CacheManager:
         self.stats.lookups += 1
         self.stats.hit_tokens += cached_tokens
         self.stats.total_tokens += n_tok
+        self.stats.relay_hit_tokens += self.index.relay_tokens(cached_blocks)
         return Allocation(cached_blocks, new_blocks, cached_tokens, n_tok)
 
     def begin(self, tokens) -> Allocation:
@@ -151,6 +157,7 @@ class CacheManager:
         self.stats.lookups += 1
         self.stats.hit_tokens += cached_tokens
         self.stats.total_tokens += len(tokens)
+        self.stats.relay_hit_tokens += self.index.relay_tokens(cached_blocks)
         return Allocation(cached_blocks, [], cached_tokens, len(tokens))
 
     def extend(self, alloc: Allocation, n_pages: int) -> list:

@@ -32,6 +32,7 @@ class Node:
     parent: Optional["Node"]
     children: dict = field(default_factory=dict)
     seq: int = 0                  # LRU clock
+    provenance: str = "prefill"   # who wrote the page: prefill | relay
 
     @property
     def is_leaf(self):
@@ -99,6 +100,50 @@ class PrefixIndex:
             node = child
         return new
 
+    def insert_pages(self, tokens, block_ids, *,
+                     provenance: str = "relay") -> list[int]:
+        """Adopt already-written pool pages into the tree (relay publication:
+        a finished sequence's decode-provenance KV entering the prefix cache
+        keyed by its full token stream). Like ``insert``, but returns the
+        block ids actually ADOPTED as new nodes — a page whose token segment
+        an existing node already serves is NOT adopted (the incumbent keeps
+        serving it; the caller must keep dropping its duplicate copy). New
+        nodes carry ``provenance`` so stats and the sanitizer can tell
+        relay-published pages from prefill-published ones; pages already in
+        the tree keep the provenance of whoever wrote them first."""
+        bs = self.block_size
+        node = self.root
+        adopted: list[int] = []
+        self._clock += 1
+        for i, bid in enumerate(block_ids):
+            seg = tuple(tokens[i * bs:(i + 1) * bs])
+            if len(seg) < bs:
+                break                     # partial block: not indexable
+            child = node.children.get(seg)
+            if child is None:
+                child = Node(key=seg, block_id=bid, parent=node,
+                             provenance=provenance)
+                node.children[seg] = child
+                self._by_block[bid] = child
+                adopted.append(bid)
+            child.seq = self._clock
+            node = child
+        return adopted
+
+    def relay_tokens(self, block_ids) -> int:
+        """Tokens among ``block_ids`` served by RELAY-provenance nodes (pages
+        the decode plane wrote, published at sequence finish) — the relay
+        share of a prefix hit, for ``CacheStats`` accounting."""
+        by = self._by_block
+        return sum(self.block_size for bid in block_ids
+                   if bid in by and by[bid].provenance == "relay")
+
+    @property
+    def relay_nodes(self) -> int:
+        """Tree nodes whose page holds decode-written (relay-published) KV."""
+        return sum(1 for nd in self._by_block.values()
+                   if nd.provenance == "relay")
+
     def remove_block(self, block_id: int) -> None:
         """Pool evicted this block: drop its node (subtree must re-prefill).
 
@@ -154,6 +199,17 @@ class NullPrefixIndex:
         return 0
 
     def insert(self, tokens, block_ids) -> int:
+        return 0
+
+    def insert_pages(self, tokens, block_ids, *,
+                     provenance: str = "relay") -> list:
+        return []
+
+    def relay_tokens(self, block_ids) -> int:
+        return 0
+
+    @property
+    def relay_nodes(self) -> int:
         return 0
 
     def remove_block(self, block_id: int) -> None:

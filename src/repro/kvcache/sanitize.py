@@ -13,7 +13,12 @@ scheduler step boundary (``LocalDisaggEngine(..., sanitize=True)``):
 - sentinel hygiene: page 0 (the never-allocated padding sentinel) appears
   in no live block table;
 - radix↔pool consistency: every block the prefix index can serve a match
-  from is resident (active or LRU-cached), never free;
+  from is resident (active or LRU-cached), never free — including
+  RELAY-PUBLISHED pages (decode-written KV adopted into the tree at
+  sequence finish), which are a first-class population in the census: they
+  must sit at refcount 0 (CACHED) unless a live holder (session allocation,
+  in-flight request, decode sequence) explicitly references them, and a
+  leaked ACTIVE relay page is diagnosed by name;
 - donation poisoning: ``SanitizedKVPool`` replaces the leaves of every
   previously handed-out ``decode_state``/``make_decode_cache`` pytree with
   ``_PoisonedBuffer`` the moment the paired absorb lands — a read through a
@@ -231,10 +236,27 @@ class PoolSanitizer:
         self.checks = 0          # step boundaries validated (test hook)
 
     # -- holder census --------------------------------------------------
+    def _relay_published(self) -> set[int]:
+        """Page ids the radix tree serves from RELAY provenance (decode-
+        written KV published at sequence finish). Relay publication adds a
+        page LIFECYCLE, not a holder class: a published page is unref'd to
+        CACHED (refcount 0) in the same ``_finish`` that adopted it, so the
+        census expects relay pages to be held only by the ordinary holders
+        below (a later request's cached-prefix ref, a session allocation).
+        The set exists so a violation NAMES the relay page as such."""
+        idx = self.engine.prefix_index
+        if idx is None or not hasattr(idx, "_by_block"):
+            return set()
+        return {bid for bid, nd in idx._by_block.items()
+                if getattr(nd, "provenance", "prefill") == "relay"}
+
     def _expected_refcounts(self) -> dict[int, list[str]]:
         """page id -> list of holder descriptions (one entry per expected
         reference), from prefill sessions, in-flight chunked requests, and
-        active decode sequences."""
+        active decode sequences. Relay-published pages appear here exactly
+        when one of those holders references them (e.g. a request whose
+        cached prefix includes relayed pages) — publication itself leaves
+        them CACHED at refcount 0 (see ``_relay_published``)."""
         eng = self.engine
         holders: dict[int, list[str]] = {}
 
@@ -294,15 +316,25 @@ class PoolSanitizer:
                 _fail(f"sentinel page 0 appears in the live block table of "
                       f"{who}: {bt} — padding leaked into ownership")
         holders = self._expected_refcounts()
+        relay = self._relay_published()
         for bid, who in sorted(holders.items()):
             rc = pool._refcount[bid]
             if rc != len(who):
-                _fail(f"refcount mismatch on page {bid}: pool says {rc}, "
-                      f"engine structures hold {len(who)} reference(s) "
-                      f"({'; '.join(who)})")
+                tag = (" [relay-published page]" if bid in relay else "")
+                _fail(f"refcount mismatch on page {bid}{tag}: pool says "
+                      f"{rc}, engine structures hold {len(who)} "
+                      f"reference(s) ({'; '.join(who)})")
         for bid in range(1, pool.num_blocks + 1):
             rc = pool._refcount[bid]
             if rc > 0 and bid not in holders:
+                if bid in relay:
+                    _fail(f"page {bid} is ACTIVE (refcount {rc}) but NO "
+                          f"engine structure holds it — holder: relay "
+                          f"publication (decode-written page adopted by the "
+                          f"radix tree at finish); _finish/_relay_publish "
+                          f"must unref adopted pages to CACHED, so an "
+                          f"ACTIVE holderless relay page is a leaked "
+                          f"reference")
                 _fail(f"page {bid} is ACTIVE (refcount {rc}) but NO engine "
                       f"structure holds it — a leaked reference (missing "
                       f"unref/drop on some exit path)")

@@ -70,6 +70,21 @@ Data plane (pure global-attention archs, the paper's operating point):
     place. Pages are freed only when the last holder (prefill session or
     decode sequence) releases them.
 
+Relay KV (default-on, ``relay=False`` to A/B): when a sequence FINISHES
+decoding, its private decode pages are published into the same engine-global
+radix tree, keyed by the full token stream (prompt ⧺ generated tokens) — the
+handoff machinery run in reverse. A later request from ANY model whose
+prompt extends that stream then starts prefill past the finished sequence's
+entire output with a zero-copy block-table reference, extending the paper's
+fan-out prefill sharing to sequential agent pipelines (model A's answer is
+model B's prompt). Publication is gated on KV-compatibility: only decoders
+whose KV path is bit-identical to the frozen base (same full weights, or
+differing only in post-KV leaves — the unembed head / final norm) may
+publish, so a relayed prefix is always bit-identical to cold prefill.
+Full pages are adopted directly; the partial tail was already privatized by
+the handoff's page-level CoW, and a still-partial tail at finish is dropped
+as before. Aborted sequences never publish.
+
 Archs with non-KV sequence state (SSM/recurrent/hybrid/enc-dec) fall back to
 the dense per-session path (``paged=False``), preserving the state-handoff
 semantics validated in tests/test_engine_ssm.py.
@@ -147,6 +162,9 @@ class DecodeSeq:
     params: SamplingParams = field(default_factory=SamplingParams)
     finish_reason: str | None = None   # set on eos/stop; None -> length
     out: list = field(default_factory=list)
+    tokens: list = field(default_factory=list)  # prompt (relay publication
+                                                # keys pages by full stream)
+    first0: int = 2               # the handoff's first decode input token
 
 
 class _CounterField:
@@ -210,11 +228,21 @@ class EngineStats:
     plane_rebuilds = _CounterField(
         "engine_plane_rebuilds_total",
         "fused-plane relayouts applied at step boundaries")
+    relay_publishes = _CounterField(
+        "engine_relay_publishes_total",
+        "finished sequences whose decode KV entered the prefix tree")
+    relay_pages_published = _CounterField(
+        "engine_relay_pages_published_total",
+        "decode-written pages adopted into the radix tree at finish")
+    relay_skipped = _CounterField(
+        "engine_relay_skipped_total",
+        "finished sequences not published (relay-incompatible decoder)")
 
     FIELDS = ("prefill_tokens_computed", "prefill_tokens_reused", "handoffs",
               "handoff_bytes", "cow_page_copies", "decode_steps",
               "decode_tokens", "decode_dispatches", "model_churn_events",
-              "plane_rebuilds")
+              "plane_rebuilds", "relay_publishes", "relay_pages_published",
+              "relay_skipped")
 
     def __init__(self, _engine: object = None,
                  registry: MetricsRegistry | None = None):
@@ -254,14 +282,31 @@ class EngineStats:
         agg = CacheStats.merge(w.mgr.stats for w in eng.prefill_workers)
         pools = ([eng.block_pool] if eng.block_pool is not None
                  else [w.mgr.pool for w in eng.prefill_workers])
+        # pages_cached counts EVERY radix-resident evictable page regardless
+        # of provenance — prefill-published and decode-(relay-)published pages
+        # live in the same pool population; the relay share is split out so
+        # dashboards can see how much cache occupancy decode contributed
+        idx = eng.prefix_index
+        relay_nodes = getattr(idx, "relay_nodes", 0) if idx is not None else 0
+        cached_relay = 0
+        if (eng.block_pool is not None and idx is not None
+                and hasattr(idx, "_by_block")):
+            cached = eng.block_pool._cached
+            cached_relay = sum(1 for bid, nd in idx._by_block.items()
+                               if nd.provenance == "relay" and bid in cached)
         d.update(
             prefix_hit_tokens=agg.hit_tokens,
             prefix_total_tokens=agg.total_tokens,
             prefix_lookups=agg.lookups,
             prefix_hit_ratio=agg.hit_ratio,
+            relay_hit_tokens=agg.relay_hit_tokens,
+            relay_hit_ratio=(agg.relay_hit_tokens / agg.total_tokens
+                             if agg.total_tokens else 0.0),
             evictions=sum(p.stats.evictions for p in pools),
             pages_active=sum(p.active_count for p in pools),
             pages_cached=sum(p.cached_count for p in pools),
+            pages_cached_relay=cached_relay,
+            relay_nodes=relay_nodes,
             prefix_nodes=(len(eng.prefix_index)
                           if eng.prefix_index is not None
                           else sum(len(w.mgr.index)
@@ -424,6 +469,11 @@ class DecodeWorker:
     the fused plane reads the adapter factors straight from the registry and
     never touches this copy."""
 
+    #: may this model's decode-written KV be relay-published as shared
+    #: prefix? Set by the engine at attach time (KV path bit-identical to
+    #: the frozen base); False for directly-constructed workers.
+    relay_compatible = False
+
     def __init__(self, cfg: ModelConfig, model_id: str, spec,
                  expected_schema, base_params=None):
         self.cfg = cfg
@@ -522,7 +572,7 @@ class LocalDisaggEngine:
                  chunked: bool = False, token_budget: int = 256,
                  chunk_size: int = 64, sched_policy: str = "fcfs",
                  fused: bool | None = None, prefix_cache: bool = True,
-                 metrics: bool = True, autoscale=None,
+                 relay: bool = True, metrics: bool = True, autoscale=None,
                  sanitize: bool = False):
         self.cfg = cfg
         self.base_params = base_params
@@ -545,6 +595,12 @@ class LocalDisaggEngine:
         self.handoff = HandoffChannel(cfg)
         self.router = PrefillRouter(n_prefill_workers, router_policy)
         self.prefix_cache = prefix_cache
+        # relay KV: publish finished sequences' decode pages into the radix
+        # tree (zero-copy pipeline reuse; module docstring). Requires the
+        # paged plane and rides on the prefix tree — with prefix_cache=False
+        # the Null index adopts nothing, so relay degrades to off by
+        # construction. relay=False is the A/B escape hatch (bit-identical).
+        self.relay = relay and self.paged and prefix_cache
         if sanitize and not self.paged:
             raise ValueError("sanitize=True requires the paged KV plane "
                              "(the sanitizer checks page refcounts)")
@@ -765,6 +821,10 @@ class LocalDisaggEngine:
         if self.prefix_index is not None:
             reg.gauge("engine_prefix_nodes", "radix prefix-index nodes",
                       fn=lambda: len(self.prefix_index))
+            reg.gauge("engine_relay_nodes",
+                      "radix nodes holding decode-written (relay) KV",
+                      fn=lambda: getattr(self.prefix_index,
+                                         "relay_nodes", 0))
 
     def metrics(self) -> dict:
         """The full observability surface as structured dicts:
@@ -879,12 +939,46 @@ class LocalDisaggEngine:
     # ------------------------------------------------------------------
     # model lifecycle (driven by repro.serving.registry.ModelRegistry)
     # ------------------------------------------------------------------
+    #: top-level param subtrees that never feed a KV row: the unembed head
+    #: and the final norm run strictly AFTER the last layer's KV write, so a
+    #: decoder differing ONLY here produces bit-identical KV to the frozen
+    #: base — the canonical PrefillShare shape of a frozen trunk + tuned head
+    _KV_NEUTRAL_KEYS = ("unembed", "final_norm")
+
+    def _relay_compatible(self, spec) -> bool:
+        """May ``spec``'s decode-written KV be republished as shared prefix?
+        Only if its KV path is bit-identical to the frozen base model's:
+        full weights that ARE the base, or differ solely in KV-neutral
+        leaves (``_KV_NEUTRAL_KEYS``). LoRA adapters perturb attention
+        weights, so their KV is theirs alone. Checked once at attach time
+        (weight identity is a property of the registration, not the step)."""
+        if spec.full is None:
+            return False
+        if spec.full is self.base_params:
+            return True
+        tu = jax.tree_util
+        if (tu.tree_structure(spec.full)
+                != tu.tree_structure(self.base_params)):
+            return False
+        base = tu.tree_flatten_with_path(self.base_params)[0]
+        for (path, lb), (_, ld) in zip(base,
+                                       tu.tree_flatten_with_path(spec.full)[0]):
+            key = getattr(path[0], "key", None) if path else None
+            if key in self._KV_NEUTRAL_KEYS:
+                continue
+            if lb is not ld and not np.array_equal(np.asarray(lb),
+                                                   np.asarray(ld)):
+                return False
+        return True
+
     def _attach_decoder(self, model_id: str, spec) -> None:
         """Registry hook: make ``model_id`` servable NOW (the per-model
         DecodeWorker materializes its weights lazily; the fused plane picks
         the model up at the next step boundary)."""
-        self.decoders[model_id] = DecodeWorker(self.cfg, model_id, spec,
-                                               self.schema, self.base_params)
+        dw = DecodeWorker(self.cfg, model_id, spec,
+                          self.schema, self.base_params)
+        dw.relay_compatible = self._relay_compatible(dw.spec)
+        self.decoders[model_id] = dw
 
     def _detach_decoder(self, model_id: str) -> None:
         self.decoders.pop(model_id, None)
@@ -925,11 +1019,13 @@ class LocalDisaggEngine:
 
     def _handoff_seq(self, block_table, n: int, sid: int, model_id: str,
                      params: SamplingParams, first_token: int,
-                     rid: int) -> DecodeSeq:
+                     rid: int, tokens=None) -> DecodeSeq:
         """Zero-copy handoff: block-table reference + page refcounts, with a
         page-level copy-on-write clone of a partially-filled tail page so the
         decode sequence can append privately. Raises PoolExhausted (with the
-        handoff refs rolled back) if the clone page cannot be allocated."""
+        handoff refs rolled back) if the clone page cannot be allocated.
+        ``tokens`` (the prompt) rides along on the sequence so relay
+        publication can key its pages by the full token stream at finish."""
         dw = self.decoders[model_id]
         HandoffChannel.check(self.schema, dw.expected_schema)
         t0 = time.perf_counter()
@@ -966,7 +1062,9 @@ class LocalDisaggEngine:
             self.metrics_registry.trace(rid).event(
                 SPAN_HANDOFF, bytes=plan.bytes, seconds=dt)
         return DecodeSeq(rid, sid, model_id, bt, shared, private, n,
-                         first_token, params.max_tokens, params)
+                         first_token, params.max_tokens, params,
+                         tokens=list(tokens) if tokens is not None else [],
+                         first0=first_token)
 
     def submit(self, sid: int, context_tokens, model_id: str,
                gen_tokens: int, first_token: int = 2,
@@ -1022,7 +1120,7 @@ class LocalDisaggEngine:
             self._finish_prefill_only(rid)
             return rid
         self.scheduler.add_decode_seq(self._handoff_seq(
-            bt, n, sid, model_id, params, first_token, rid))
+            bt, n, sid, model_id, params, first_token, rid, tokens=tokens))
         return rid
 
     # ------------------------------------------------------------------
@@ -1291,10 +1389,47 @@ class LocalDisaggEngine:
         self.stats.decode_dispatches += 1
         return np.asarray(nxt)
 
+    def _relay_publish(self, s: DecodeSeq) -> set:
+        """Publish a FINISHED sequence's resident KV into the radix tree,
+        keyed by its full token stream (prompt ⧺ first decode input ⧺
+        generated tokens bar the last, whose KV was never written) — the
+        zero-copy handoff run in reverse. Returns the set of page ids the
+        tree adopted; ``_finish`` keeps those (unref -> CACHED, evictable,
+        reusable by ANY model) and hard-drops the rest as before. Only
+        relay-compatible decoders publish (KV bit-identical to the frozen
+        base — ``_relay_compatible``); everything else, plus aborts (which
+        never reach here), behaves exactly as without relay."""
+        if not (self.relay and s.tokens and s.out):
+            return set()
+        dw = self.decoders.get(s.model_id)
+        if dw is None or not dw.relay_compatible:
+            self.stats.relay_skipped += 1
+            return set()
+        # position p holds the KV of the token INPUT at p: prompt tokens at
+        # 0..n-1, the handoff's first decode input at n, out[:-1] after —
+        # len(stream) == s.pos, and only full pages are indexable
+        stream = list(s.tokens) + [s.first0] + [int(t) for t in s.out[:-1]]
+        full = s.pos // self.page_size
+        adopted = set(self.prefix_index.insert_pages(
+            stream, s.block_table[:full], provenance="relay"))
+        if adopted:
+            self.stats.relay_publishes += 1
+            self.stats.relay_pages_published += len(adopted)
+        return adopted
+
     def _finish(self, s: DecodeSeq) -> None:
         self._results[s.rid] = np.asarray(s.out, np.int32)
+        adopted = self._relay_publish(s)
         self.block_pool.unref(s.shared_blocks)   # freed only w/ last holder
-        self.block_pool.drop(s.private_blocks)   # generated KV: not reusable
+        if adopted:
+            # relay-published pages stay resident (CACHED, LRU-evictable,
+            # tree-served); duplicates/partial tail are dropped as before
+            self.block_pool.unref([b for b in s.private_blocks
+                                   if b in adopted])
+            self.block_pool.drop([b for b in s.private_blocks
+                                  if b not in adopted])
+        else:
+            self.block_pool.drop(s.private_blocks)   # generated KV: private
         self._on_request_done(s.rid, s.finish_reason or FINISH_LENGTH)
 
     # ------------------------------------------------------------------

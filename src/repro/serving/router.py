@@ -21,7 +21,12 @@ unspecified. Policies:
                  beats an idle cold one, and under the engine-global radix
                  tree (hit length worker-independent) the policy degrades to
                  least_loaded with a home-worker tie-break. PPD's "Not All
-                 Prefills Are Equal" observation, applied to routing.
+                 Prefills Are Equal" observation, applied to routing. The
+                 ``match_len`` walk makes no provenance distinction, so
+                 relay-published pages (decode-written KV adopted at finish)
+                 price exactly like prefill-cached ones: a pipeline
+                 consumer whose prompt embeds a producer's output is near
+                 free, only its tail is cold (tests/test_relay.py).
 
 ``benchmarks`` comparison: tests/test_router.py asserts the qualitative
 ordering (spillover >= pinned throughput under skewed load, pinned >= others

@@ -358,7 +358,7 @@ class ChunkedScheduler:
             try:
                 seq = self.engine._handoff_seq(
                     bt, r.n, r.sid, r.model_id, r.params,
-                    r.first_token, r.rid)
+                    r.first_token, r.rid, tokens=r.tokens)
             except PoolExhausted:
                 self.stats.stalls += 1   # CoW clone page unavailable: retry
                 continue

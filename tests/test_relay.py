@@ -1,0 +1,286 @@
+"""Relay KV: decode-written pages published into the engine-global radix
+tree at sequence finish, so a later request from ANY relay-compatible model
+whose prompt extends prompt ++ generated tokens starts prefill past the
+producer's entire output with a zero-copy block-table reference — and every
+relayed token stream is bit-identical to a relay=False run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import LoRAPair, lora_init
+from repro.models import init_params
+from repro.serving.api import SamplingParams
+from repro.serving.engine import LocalDisaggEngine
+from repro.serving.registry import LoRAAdapter
+
+CFG = ModelConfig(name="relay-eng", arch_type="dense", n_layers=2,
+                  d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                  vocab_size=64, dtype="float32")
+PAGE = 8
+PROMPT = list(range(1, 21))                      # 2 full pages + a 4-token tail
+
+
+@pytest.fixture(scope="module")
+def base():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _relay_engine(base, *, relay=True, **kw):
+    """Two full-weight decoders sharing the base KV path: both are
+    relay-compatible, so A's decode pages are shareable with B."""
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("page_size", PAGE)
+    eng = LocalDisaggEngine(CFG, base, relay=relay, **kw)
+    eng.models.register("a", base)
+    eng.models.register("b", base)
+    return eng
+
+
+def _tok(seed, n):
+    return [int(t) for t in
+            np.random.default_rng(seed).integers(4, 60, size=n)]
+
+
+def _chain(eng, prompt, a_max=12, b_max=6):
+    """The paper's pipeline pattern: B's prompt = A's prompt ++ A's output
+    (joined by the default first_token=2, matching the published stream)."""
+    a_out = list(eng.generate("a", prompt,
+                              SamplingParams(max_tokens=a_max)).result())
+    b_prompt = list(prompt) + [2] + [int(t) for t in a_out]
+    b_out = list(eng.generate("b", b_prompt,
+                              SamplingParams(max_tokens=b_max)).result())
+    return a_out, b_prompt, b_out
+
+
+# ======================================================================
+# tentpole headline: chain reuse past A's output, bit-identical to relay off
+
+
+@pytest.mark.parametrize("chunked", [False, True], ids=["eager", "chunked"])
+def test_chain_relay_hits_and_bit_identity(base, chunked):
+    """A->B chain under sanitize=True: B's lookup covers every full page of
+    the published stream (prompt AND generated tokens), the relay share of
+    the hit exceeds half of A's output, and B's tokens are bit-identical to
+    a relay=False engine."""
+    kw = dict(chunked=chunked, sanitize=True)
+    on = _relay_engine(base, **kw)
+    a_out, b_prompt, b_on = _chain(on, PROMPT)
+    s = on.stats()
+    assert s["relay_publishes"] >= 1 and s["relay_pages_published"] >= 1
+    # published stream = prompt ++ first0 ++ out[:-1]; B extends it, so the
+    # cached prefix reaches past A's ENTIRE output up to page granularity
+    full = (len(PROMPT) + len(a_out)) // PAGE
+    assert on.prefix_index.match_len(b_prompt) >= full * PAGE
+    assert s["relay_hit_tokens"] > 0.5 * len(a_out), s
+    assert s["relay_hit_ratio"] > 0.0
+    on.block_pool.check_invariants()
+    on.prefix_index.check_invariants()
+    assert on.block_pool.active_count == 0       # everything released
+
+    off = _relay_engine(base, relay=False, **kw)
+    a_ref, _, b_ref = _chain(off, PROMPT)
+    so = off.stats()
+    assert so["relay_publishes"] == 0 and so["relay_hit_tokens"] == 0
+    assert (a_out, b_on) == (a_ref, b_ref), \
+        "relay reuse must never change tokens"
+
+
+@pytest.mark.parametrize("chunked", [False, True], ids=["eager", "chunked"])
+def test_relay_pages_bit_identical_to_cold_prefill(base, chunked):
+    """The decode-written pages the tree serves are BIT-IDENTICAL to what a
+    cold prefill of the same stream would have written — the invariant that
+    makes zero-copy relay sound (no recompute-and-compare at lookup)."""
+    hot = _relay_engine(base, chunked=chunked)
+    a_out = list(hot.generate("a", PROMPT,
+                              SamplingParams(max_tokens=12)).result())
+    stream = PROMPT + [2] + [int(t) for t in a_out[:-1]]
+    hot_blocks, n = hot.prefix_index.match(stream)
+    assert n == (len(stream) // PAGE) * PAGE and hot_blocks
+    assert any(hot.prefix_index._by_block[b].provenance == "relay"
+               for b in hot_blocks)
+
+    cold = _relay_engine(base, chunked=chunked)
+    cold.generate("a", stream, SamplingParams(max_tokens=1)).result()
+    cold_blocks, m = cold.prefix_index.match(stream)
+    assert m == n
+    for hb, cb in zip(hot_blocks, cold_blocks):
+        for g in hot.kvpool.k_groups:
+            assert np.array_equal(
+                np.asarray(hot.kvpool.k_groups[g][:, hb]),
+                np.asarray(cold.kvpool.k_groups[g][:, cb]))
+            assert np.array_equal(
+                np.asarray(hot.kvpool.v_groups[g][:, hb]),
+                np.asarray(cold.kvpool.v_groups[g][:, cb]))
+
+
+# ======================================================================
+# publication gate: only KV-path-identical decoders publish
+
+
+def test_incompatible_decoder_skips_publish(base):
+    """A decoder with different weights writes different KV: finish must
+    NOT publish, and the skip is counted."""
+    other = init_params(CFG, jax.random.PRNGKey(7))
+    eng = LocalDisaggEngine(CFG, base, {"m0": other}, num_pages=64,
+                            page_size=PAGE, chunked=True)
+    eng.generate("m0", PROMPT, SamplingParams(max_tokens=12)).result()
+    s = eng.stats()
+    assert s["relay_publishes"] == 0 and s["relay_pages_published"] == 0
+    assert s["relay_skipped"] >= 1
+    assert s["relay_nodes"] == 0 and eng.prefix_index.relay_nodes == 0
+
+
+def test_kv_neutral_tune_publishes_kv_feeding_tune_does_not():
+    """The compatibility check is per-leaf: tuning layers AFTER the KV is
+    written (unembed / final_norm) keeps the decoder relay-compatible;
+    tuning the input embedding (which feeds every KV write) does not."""
+    cfg = ModelConfig(name="relay-untied", arch_type="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab_size=64, dtype="float32", tie_embeddings=False)
+    b2 = init_params(cfg, jax.random.PRNGKey(0))
+    bump = lambda t: jax.tree_util.tree_map(lambda x: x + 0.25, t)  # noqa: E731
+    head = dict(b2, unembed=bump(b2["unembed"]),
+                final_norm=bump(b2["final_norm"]))
+    emb = dict(b2, embed=bump(b2["embed"]))
+    eng = LocalDisaggEngine(cfg, b2, num_pages=64, page_size=PAGE,
+                            chunked=True)
+    eng.models.register("head", head)
+    eng.models.register("emb", emb)
+    eng.generate("head", PROMPT, SamplingParams(max_tokens=PAGE + 2)).result()
+    assert eng.stats()["relay_publishes"] == 1
+    eng.generate("emb", _tok(9, 20), SamplingParams(max_tokens=PAGE + 2)) \
+       .result()
+    s = eng.stats()
+    assert s["relay_publishes"] == 1 and s["relay_skipped"] >= 1
+
+
+def test_lora_decoder_never_publishes(base):
+    """LoRA perturbs attention weights inside the decode step, so its KV is
+    not the base module's KV: never published."""
+    tree = lora_init(jax.random.PRNGKey(5), base, rank=4)
+    flat, td = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: x is None or isinstance(x, LoRAPair))
+    flat = [None if p is None else
+            LoRAPair(p.A, 0.05 * jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(5), 77 + i),
+                p.B.shape, p.B.dtype))
+            for i, p in enumerate(flat)]
+    adapter = LoRAAdapter(jax.tree_util.tree_unflatten(td, flat),
+                          alpha=8.0, rank=4)
+    eng = LocalDisaggEngine(CFG, base, num_pages=64, page_size=PAGE,
+                            chunked=True)
+    eng.models.register("lora", adapter)
+    eng.generate("lora", PROMPT, SamplingParams(max_tokens=PAGE + 2)).result()
+    s = eng.stats()
+    assert s["relay_publishes"] == 0 and s["relay_skipped"] >= 1
+
+
+def test_prefix_cache_off_degrades_relay_off(base):
+    """relay requires the global tree: with prefix_cache=False the Null
+    index adopts nothing and the engine resolves relay to off."""
+    eng = _relay_engine(base, prefix_cache=False)
+    assert eng.relay is False
+    _chain(eng, PROMPT)
+    s = eng.stats()
+    assert s["relay_publishes"] == 0 and s["relay_nodes"] == 0
+
+
+# ======================================================================
+# satellite: abort x relay — pages to baseline, tree intact, sanitize clean
+
+
+def test_abort_paths_free_pages_to_baseline(base):
+    """Abort the CONSUMER mid-prefill (holding relay pages as cached
+    prefix), then abort a PRODUCER mid-decode (before it could publish):
+    free-page counts return exactly to baseline, the tree keeps its relay
+    nodes, the sanitizer's census stays clean, and the chain still
+    completes bit-identically afterwards."""
+    eng = _relay_engine(base, chunked=True, chunk_size=PAGE, sanitize=True)
+    baseline = eng.block_pool.free_count
+    a_out = list(eng.generate("a", PROMPT,
+                              SamplingParams(max_tokens=12)).result())
+    assert eng.stats()["relay_pages_published"] > 0
+    assert eng.block_pool.free_count == baseline   # published pages: CACHED
+    relay_bids = {b for b, nd in eng.prefix_index._by_block.items()
+                  if nd.provenance == "relay"}
+    b_prompt = PROMPT + [2] + [int(t) for t in a_out]
+
+    hb = eng.generate("b", b_prompt, SamplingParams(max_tokens=6))
+    eng.scheduler.step()                           # mid-prefill, prefix held
+    assert eng.abort(hb) is True
+    eng.scheduler.step()                           # sanitized census passes
+    assert eng.block_pool.free_count == baseline
+    assert relay_bids <= set(eng.prefix_index._by_block), \
+        "abort must not tear published pages out of the tree"
+
+    pubs = eng.stats()["relay_publishes"]
+    ha = eng.generate("a", _tok(4, 20), SamplingParams(max_tokens=12))
+    for _ in range(32):
+        eng.scheduler.step()
+        if eng.scheduler.active:
+            break
+    assert eng.abort(ha) is True
+    eng.scheduler.step()
+    assert eng.stats()["relay_publishes"] == pubs, \
+        "aborted sequences never publish"
+    assert eng.block_pool.free_count == baseline
+    eng.block_pool.check_invariants()
+    eng.prefix_index.check_invariants()
+
+    b_on = list(eng.generate("b", b_prompt,
+                             SamplingParams(max_tokens=6)).result())
+    off = _relay_engine(base, relay=False, chunked=True, chunk_size=PAGE)
+    off.generate("a", PROMPT, SamplingParams(max_tokens=12)).result()
+    b_ref = list(off.generate("b", b_prompt,
+                              SamplingParams(max_tokens=6)).result())
+    assert b_on == b_ref
+
+
+def test_relay_node_eviction_under_pressure(base):
+    """A pool small enough to force LRU eviction of relay nodes: no lookup
+    ever returns an evicted page, invariants hold, and re-running the
+    consumer prompt (now a cold re-prefill) is still bit-identical."""
+    eng = _relay_engine(base, num_pages=12, chunked=True, chunk_size=PAGE)
+    a_out, b_prompt, b_first = _chain(eng, PROMPT)
+    for i in range(6):                             # churn: evict relay nodes
+        eng.generate("a", _tok(60 + i, 3 * PAGE),
+                     SamplingParams(max_tokens=2)).result()
+    assert eng.block_pool.stats.evictions > 0
+    eng.prefix_index.check_invariants()
+    for bid in eng.prefix_index._by_block:         # tree never points at FREE
+        assert (eng.block_pool.refcount(bid) > 0
+                or bid in eng.block_pool._cached)
+    b_again = list(eng.generate("b", b_prompt,
+                                SamplingParams(max_tokens=6)).result())
+    assert b_again == b_first
+    eng.block_pool.check_invariants()
+
+
+# ======================================================================
+# satellites: router pricing + stats surface
+
+
+def test_router_prices_relayed_tokens_as_cached(base):
+    """prefix_aware routing consults match_len, which walks the one global
+    tree: relayed pages price exactly like prefill-cached ones, so the
+    router sends the consumer where only the tail is cold."""
+    eng = _relay_engine(base, chunked=True, n_prefill_workers=2)
+    a_out, b_prompt, _ = _chain(eng, PROMPT)
+    full = (len(PROMPT) + len(a_out)) // PAGE
+    for w in eng.prefill_workers:
+        assert w.mgr.index.match_len(b_prompt) >= full * PAGE
+
+
+def test_stats_surface_relay_fields(base):
+    """engine.stats() exposes the relay counters, the relay share of the
+    cached-page gauge, and keeps pages_cached covering BOTH provenances."""
+    eng = _relay_engine(base, chunked=True)
+    _chain(eng, PROMPT)
+    s = eng.stats()
+    for k in ("relay_publishes", "relay_pages_published", "relay_skipped",
+              "relay_hit_tokens", "relay_hit_ratio", "pages_cached_relay",
+              "relay_nodes"):
+        assert k in s, k
+    assert s["relay_nodes"] >= 1 and s["pages_cached_relay"] >= 1
+    assert s["pages_cached"] >= s["pages_cached_relay"]

@@ -124,6 +124,54 @@ def test_stale_index_entry_trips():
         eng.scheduler.step()
 
 
+def test_leaked_relay_page_trips_with_relay_naming():
+    """Relay-published pages are first-class in the step census: a published
+    page seeded ACTIVE with NO engine holder must trip with a diagnostic
+    NAMING relay publication as the holder class (not the generic leak
+    message) — the PR 8 ROADMAP instruction for new page owners."""
+    base, _ = _params()
+    eng = LocalDisaggEngine(CFG, base, num_pages=64, page_size=PAGE,
+                            chunked=True, sanitize=True)
+    eng.models.register("m_base", base)       # KV path == base: may publish
+    prompt = list(range(1, 1 + 2 * PAGE))
+    eng.generate("m_base", prompt,
+                 SamplingParams(max_tokens=PAGE + 2)).result()
+    assert eng.stats()["relay_pages_published"] > 0
+    bid = next(bid for bid, nd in eng.prefix_index._by_block.items()
+               if nd.provenance == "relay")
+    eng.scheduler.step()                      # clean census first
+    eng.block_pool.ref([bid])                 # seeded leak: ACTIVE, no holder
+    with pytest.raises(SanitizerError, match=f"page {bid} is ACTIVE .* "
+                                             f"holder: relay publication"):
+        eng.scheduler.step()
+
+
+def test_relay_refcount_mismatch_tags_relay_page():
+    """A refcount corruption on a page that happens to be relay-published is
+    tagged as such in the mismatch diagnostic."""
+    base, _ = _params()
+    eng = LocalDisaggEngine(CFG, base, num_pages=64, page_size=PAGE,
+                            chunked=True, sanitize=True)
+    eng.models.register("m_base", base)
+    prompt = list(range(1, 1 + 2 * PAGE))
+    out = eng.generate("m_base", prompt,
+                       SamplingParams(max_tokens=PAGE + 2)).result()
+    relay_bid = next(bid for bid, nd in eng.prefix_index._by_block.items()
+                     if nd.provenance == "relay")
+    # a follower whose prompt EXTENDS the published stream holds the relay
+    # page as cached prefix while decoding; corrupt its refcount mid-flight
+    eng.generate("m_base", prompt + [2] + [int(t) for t in out],
+                 SamplingParams(max_tokens=4))
+    for _ in range(32):
+        eng.scheduler.step()
+        if eng.scheduler.active:
+            break
+    assert any(relay_bid in s.shared_blocks for s in eng.scheduler.active)
+    eng.block_pool._refcount[relay_bid] += 1
+    with pytest.raises(SanitizerError, match="relay-published page"):
+        eng.scheduler.step()
+
+
 # ======================================================================
 # donation poisoning
 # ======================================================================
