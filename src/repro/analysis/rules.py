@@ -33,6 +33,12 @@ for the rationale catalog):
 - RPR006 metrics-instrument-in-step — registry ``counter``/``gauge``/
   ``histogram`` get-or-create inside per-step code; instruments must be
   hoisted to ``__init__``/``_init_metrics`` so hot paths hold direct refs.
+- RPR007 host-materialized-pool-pages — ``np.asarray``/``jax.device_get``
+  on the paged pool's page buffers anywhere outside ``kvcache/swap.py``.
+  The swap tier is the ONE sanctioned device->host path for pool KV (it is
+  timed, fed to the preemption cost model, and censused by the sanitizer);
+  an ad-hoc host copy elsewhere serializes the device pipeline against the
+  whole pool and produces KV the swap census cannot account for.
 """
 from __future__ import annotations
 
@@ -45,7 +51,11 @@ from repro.analysis.core import (Finding, ModuleContext, Rule, attr_chain,
 # pool-ish receivers: method calls on these names are refcount operations
 _POOLISH = re.compile(r"^(pool|mgr|manager|block_pool|blockpool)$")
 ACQUIRE_METHODS = {"alloc", "ref", "acquire", "begin", "extend", "retain"}
-RELEASE_METHODS = {"unref", "drop", "release", "abandon"}
+# swap_out / discard_swapped are the swap tier's release-side transitions
+# (device rows relinquished to the pool's SWAPPED/FREE populations): a
+# rollback handler that re-parks reclaimed pages IS release discipline
+RELEASE_METHODS = {"unref", "drop", "release", "abandon", "swap_out",
+                   "discard_swapped"}
 
 # calls that cannot plausibly raise between an acquire and its release
 _SAFE_CALLS = {"append", "extend", "touch", "record_hit", "move_to_end",
@@ -511,8 +521,51 @@ class MetricsInstrumentInStep(Rule):
         return findings
 
 
+# ======================================================================
+class HostMaterializedPoolPages(Rule):
+    rule_id = "RPR007"
+    title = "host-materialized-pool-pages"
+    applies_to_tests = False        # tests assert on host copies on purpose
+
+    #: the one sanctioned device->host path for pool page KV
+    _SANCTIONED = "kvcache/swap.py"
+    #: names that identify an expression as pool page state: the pool's
+    #: buffer attributes, the pool object itself, and the whole-pool
+    #: pytree accessor the swap tier gathers from
+    _POOL_TOKENS = {"k_groups", "v_groups", "k_tail", "v_tail",
+                    "kvpool", "kv_pool", "pool_state"}
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        if ctx.path.replace("\\", "/").endswith(self._SANCTIONED):
+            return []
+        findings = []
+        for c in walk_calls(ctx.tree):
+            name = call_name(c)
+            recv = receiver_name(c)
+            if not ((name == "asarray" and recv in ("np", "numpy", "onp"))
+                    or name == "device_get"):
+                continue
+            toks: set[str] = set()
+            for a in list(c.args) + [k.value for k in c.keywords]:
+                for sub in ast.walk(a):
+                    if isinstance(sub, ast.Name):
+                        toks.add(sub.id)
+                    elif isinstance(sub, ast.Attribute):
+                        toks.add(sub.attr)
+            if toks & self._POOL_TOKENS:
+                findings.append(self.finding(
+                    ctx, c,
+                    f"'{name}(...)' materializes pool page buffers on the "
+                    f"host outside {self._SANCTIONED} — the swap tier is "
+                    f"the one sanctioned device->host path for pool KV "
+                    f"(timed for the preemption cost model, censused by the "
+                    f"sanitizer); an ad-hoc host copy serializes the device "
+                    f"pipeline and escapes the swap census"))
+        return findings
+
+
 ALL_RULES = [DonationAfterUse(), RefcountBalance(), HostSyncInHotPath(),
              UnbucketedShapeIntoJit(), SideEffectInJit(),
-             MetricsInstrumentInStep()]
+             MetricsInstrumentInStep(), HostMaterializedPoolPages()]
 
 RULES_BY_ID = {r.rule_id: r for r in ALL_RULES}

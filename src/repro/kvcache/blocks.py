@@ -6,6 +6,14 @@ referenced by requests headed to different decode models. Pages move through
 states: FREE -> ACTIVE (refcount > 0) -> CACHED (refcount 0, retained for
 prefix reuse, LRU-evictable) -> FREE.
 
+A fourth state backs oversubscription (serving/preempt.py): SWAPPED — the
+page's KV lives in a host-memory swap tier, the device row is reclaimable.
+``swap_out`` moves a sole-holder ACTIVE page to SWAPPED; ``alloc`` may
+revoke a SWAPPED page (its host copy stays valid, so the swap tier is
+as-good-as-free capacity — revocation fires a callback so the tier knows
+the device row is gone); ``reclaim_swapped`` resumes a still-resident page
+in place with zero data movement; ``discard_swapped`` frees on abort.
+
 Page id 0 is the PADDING SENTINEL: it is never allocated, so every ragged
 block table zero-padded to a common width (batched decode steps, chunked
 prefill, the fused multi-model plane's fake batch rows) aliases a page that
@@ -40,7 +48,9 @@ class BlockPool:
         self._free = list(range(num_blocks, 0, -1))
         self._refcount = [0] * (num_blocks + 1)
         self._cached = OrderedDict()          # block_id -> None, LRU order
+        self._swapped = set()                 # KV in the host swap tier
         self._evict_cbs = []                  # notify indexes on eviction
+        self._swap_reclaim_cbs = []           # notify swap tier on revocation
         self.stats = PoolStats()
 
     # ------------------------------------------------------------------
@@ -56,14 +66,30 @@ class BlockPool:
         can serve a match for a page whose KV is about to be overwritten."""
         self._evict_cbs.append(cb)
 
+    def add_swap_reclaim_callback(self, cb):
+        """Register a listener fired when ``alloc`` revokes a SWAPPED page.
+
+        The swap tier (kvcache/swap.py) registers here: a revoked page's
+        device row now belongs to a new owner, so the tier must mark the
+        victim's page non-resident and restore it from the host copy on
+        resume. The callback fires BEFORE the page is handed out."""
+        self._swap_reclaim_cbs.append(cb)
+
     @property
     def free_count(self) -> int:
-        return len(self._free) + len(self._cached)
+        # SWAPPED pages count as free capacity: their KV is safe on the host,
+        # so the device rows are reclaimable on demand (revocation callback).
+        return len(self._free) + len(self._swapped) + len(self._cached)
 
     @property
     def cached_count(self) -> int:
         """Pages retained at refcount 0 for prefix reuse (LRU-evictable)."""
         return len(self._cached)
+
+    @property
+    def swapped_count(self) -> int:
+        """Pages whose KV lives in the host swap tier (device row reclaimable)."""
+        return len(self._swapped)
 
     @property
     def active_count(self) -> int:
@@ -77,10 +103,18 @@ class BlockPool:
         out = []
         for _ in range(n):
             if not self._free:
-                bid, _ = self._cached.popitem(last=False)  # LRU
-                self.stats.evictions += 1
-                for cb in self._evict_cbs:
-                    cb(bid)
+                if self._swapped:
+                    # revoke a swapped page's device row: its KV is safe in
+                    # the host tier, the CACHED prefix KV would be lost —
+                    # so swapped rows are reclaimed before LRU eviction
+                    bid = self._swapped.pop()
+                    for cb in self._swap_reclaim_cbs:
+                        cb(bid)
+                else:
+                    bid, _ = self._cached.popitem(last=False)  # LRU
+                    self.stats.evictions += 1
+                    for cb in self._evict_cbs:
+                        cb(bid)
                 self._free.append(bid)
             bid = self._free.pop()
             self._refcount[bid] = 1
@@ -94,6 +128,10 @@ class BlockPool:
         for bid in block_ids:
             if bid == self.SENTINEL:
                 raise ValueError("page 0 is the padding sentinel, never live")
+            if bid in self._swapped:
+                raise ValueError(
+                    f"block {bid} is SWAPPED (KV in the host tier); "
+                    f"reclaim_swapped it, do not ref")
             if self._refcount[bid] == 0:
                 if bid not in self._cached:
                     raise ValueError(f"block {bid} is free, cannot ref")
@@ -124,9 +162,49 @@ class BlockPool:
         for bid in block_ids:
             if bid == self.SENTINEL:
                 raise ValueError("page 0 is the padding sentinel, never live")
+            if bid in self._swapped:
+                raise ValueError(
+                    f"block {bid} is SWAPPED; use discard_swapped")
             if bid in self._cached:
                 del self._cached[bid]
             self._refcount[bid] = 0
+            self._free.append(bid)
+
+    # ------------------------------------------------------------------
+    # swap tier (oversubscription: serving/preempt.py owns the lifecycle)
+    # ------------------------------------------------------------------
+    def swap_out(self, block_ids) -> None:
+        """ACTIVE -> SWAPPED: the caller has copied these pages' KV to the
+        host tier and relinquishes the device rows. Only sole-holder pages
+        may swap (refcount must be exactly 1 — a shared page's other holders
+        would read a revoked row)."""
+        for bid in block_ids:
+            if bid == self.SENTINEL:
+                raise ValueError("page 0 is the padding sentinel, never live")
+            rc = self._refcount[bid]
+            if rc != 1:
+                raise ValueError(
+                    f"block {bid} has refcount {rc}, only sole-holder "
+                    f"(refcount 1) pages may swap out")
+            self._refcount[bid] = 0
+            self._swapped.add(bid)
+
+    def reclaim_swapped(self, block_ids) -> None:
+        """SWAPPED -> ACTIVE in place: the device row was never revoked, so
+        the resuming sequence reattaches with zero data movement."""
+        for bid in block_ids:
+            if bid not in self._swapped:
+                raise ValueError(f"block {bid} is not swapped")
+            self._swapped.discard(bid)
+            self._refcount[bid] = 1
+
+    def discard_swapped(self, block_ids) -> None:
+        """SWAPPED -> FREE: the parked sequence was aborted, its host copy
+        is being dropped and the device rows return to the pool."""
+        for bid in block_ids:
+            if bid not in self._swapped:
+                raise ValueError(f"block {bid} is not swapped")
+            self._swapped.discard(bid)
             self._free.append(bid)
 
     def refcount(self, bid: int) -> int:
@@ -136,9 +214,12 @@ class BlockPool:
         """Property-test hook: every block is in exactly one state."""
         free = set(self._free)
         cached = set(self._cached)
+        swapped = set(self._swapped)
         assert not (free & cached), "block both free and cached"
-        assert self.SENTINEL not in free and self.SENTINEL not in cached, \
-            "sentinel page 0 entered the pool"
+        assert not (swapped & (free | cached)), \
+            "swapped block also free or cached"
+        assert self.SENTINEL not in free and self.SENTINEL not in cached \
+            and self.SENTINEL not in swapped, "sentinel page 0 entered the pool"
         assert self._refcount[self.SENTINEL] == 0, "sentinel page 0 is live"
         for bid in range(1, self.num_blocks + 1):
             rc = self._refcount[bid]
@@ -146,7 +227,9 @@ class BlockPool:
                 assert rc == 0, f"free block {bid} has refcount {rc}"
             elif bid in cached:
                 assert rc == 0, f"cached block {bid} has refcount {rc}"
+            elif bid in swapped:
+                assert rc == 0, f"swapped block {bid} has refcount {rc}"
             else:
                 assert rc > 0, f"active block {bid} has refcount {rc}"
-        assert len(free) + len(cached) + sum(
+        assert len(free) + len(cached) + len(swapped) + sum(
             1 for r in self._refcount if r > 0) == self.num_blocks

@@ -191,9 +191,24 @@ class PagedKVPool:
         instead of an un-jitted ``.at[].set`` per layer array (which cost
         O(pool) traffic per clone). Used when a decode holder must append
         into a partially-filled shared page."""
-        state = {"kg": self.k_groups, "vg": self.v_groups,
-                 "kt": tuple(self.k_tail), "vt": tuple(self.v_tail)}
-        new = _copy_page_jit(state, jnp.int32(src), jnp.int32(dst))
+        new = _copy_page_jit(self.pool_state(), jnp.int32(src), jnp.int32(dst))
+        self.set_pool_state(new)
+
+    def pool_state(self):
+        """Every page buffer as ONE pytree — the argument for a jitted,
+        donated whole-pool update (``copy_page``'s clone, the swap tier's
+        scatter-on-resume). Pair with ``set_pool_state`` on the result.
+
+        Containers are fresh (shallow) copies so the handed-out tree can be
+        invalidated independently of the pool's own references (the
+        sanitized pool poisons stale handles in place)."""
+        return {"kg": dict(self.k_groups), "vg": dict(self.v_groups),
+                "kt": list(self.k_tail), "vt": list(self.v_tail)}
+
+    def set_pool_state(self, new) -> None:
+        """Store the buffers a jitted whole-pool update returned. After a
+        donated TPU update the previous buffers are invalid (the sanitized
+        pool poisons them)."""
         self.k_groups, self.v_groups = new["kg"], new["vg"]
         self.k_tail, self.v_tail = list(new["kt"]), list(new["vt"])
 

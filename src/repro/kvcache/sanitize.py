@@ -5,7 +5,11 @@ module checks the STATE those disciplines are supposed to preserve, at every
 scheduler step boundary (``LocalDisaggEngine(..., sanitize=True)``):
 
 - pool conservation: every page id is in exactly one of FREE / CACHED /
-  ACTIVE, and the three populations sum to the pool capacity;
+  ACTIVE / SWAPPED, and the populations sum to the pool capacity;
+- swap-tier cross-check: the SWAPPED population equals exactly the pages
+  the preemption subsystem's swap records claim are still device-resident
+  (a leaked swapped page is diagnosed naming the swap tier as holder
+  class);
 - refcount cross-check: for every page, the pool's refcount equals the
   number of holders the engine's own structures claim — prefill-session
   allocations, in-flight chunked requests (their allocation, or the sibling
@@ -52,33 +56,46 @@ def check_pool(pool) -> None:
     diagnostics: every page in exactly one state, populations conserved."""
     free = set(pool._free)
     cached = set(pool._cached)
+    swapped = set(getattr(pool, "_swapped", ()))
     if len(free) != len(pool._free):
         _fail(f"pool free list holds duplicate ids: {sorted(pool._free)}")
     both = free & cached
     if both:
         _fail(f"pages {sorted(both)} are simultaneously FREE and CACHED")
+    overlap = swapped & (free | cached)
+    if overlap:
+        _fail(f"pages {sorted(overlap)} are SWAPPED but also in the "
+              f"free/cached population — swap-out must remove the page "
+              f"from every other state")
     if pool.SENTINEL in free or pool.SENTINEL in cached:
         _fail("sentinel page 0 entered the free/cached population — "
               "something allocated or released the padding page")
+    if pool.SENTINEL in swapped:
+        _fail("sentinel page 0 entered the SWAPPED population — the "
+              "padding page holds no KV to swap")
     active = 0
     for bid in range(1, pool.num_blocks + 1):
         rc = pool._refcount[bid]
         if rc < 0:
             _fail(f"page {bid} refcount is negative ({rc}): over-released")
         in_free, in_cached = bid in free, bid in cached
+        in_swapped = bid in swapped
         if rc > 0:
-            if in_free or in_cached:
+            if in_free or in_cached or in_swapped:
+                state = ("free" if in_free
+                         else "cached" if in_cached else "swapped")
                 _fail(f"page {bid} is ACTIVE (refcount {rc}) but also in "
-                      f"the {'free' if in_free else 'cached'} population")
+                      f"the {state} population")
             active += 1
-        elif not (in_free or in_cached):
+        elif not (in_free or in_cached or in_swapped):
             _fail(f"page {bid} is in no state: refcount 0, not free, "
-                  f"not cached (leaked out of the pool)")
+                  f"not cached, not swapped (leaked out of the pool)")
         elif in_cached and rc != 0:
             _fail(f"CACHED page {bid} has refcount {rc} (must be 0)")
-    if len(free) + len(cached) + active != pool.num_blocks:
+    if len(free) + len(cached) + len(swapped) + active != pool.num_blocks:
         _fail(f"pool conservation broken: {len(free)} free + {len(cached)} "
-              f"cached + {active} active != {pool.num_blocks} total")
+              f"cached + {len(swapped)} swapped + {active} active != "
+              f"{pool.num_blocks} total")
     if pool._refcount[pool.SENTINEL] != 0:
         _fail(f"sentinel page 0 has refcount "
               f"{pool._refcount[pool.SENTINEL]} — it must never be held")
@@ -109,6 +126,10 @@ def check_index(index, pool=None) -> None:
         if pool is not None:
             if bid == pool.SENTINEL:
                 _fail("prefix index holds the sentinel page 0")
+            if bid in getattr(pool, "_swapped", ()):
+                _fail(f"prefix index can serve block {bid} but the pool "
+                      f"has it SWAPPED — its KV lives in the host swap "
+                      f"tier and the device row is revocable")
             if pool._refcount[bid] == 0 and bid not in pool._cached:
                 _fail(f"prefix index can serve block {bid} but the pool "
                       f"has it FREE — matches would alias recycled KV")
@@ -222,6 +243,18 @@ class SanitizedKVPool(PagedKVPool):
         self._retire("copy_page's donated pool update")
         super().copy_page(src, dst)
 
+    def pool_state(self):
+        state = super().pool_state()
+        self._outstanding.append(state)
+        return state
+
+    def set_pool_state(self, new) -> None:
+        # the swap tier's scatter-on-resume donates the whole pool pytree on
+        # TPU (like copy_page); `new` is the update's live return value
+        self._outstanding = [t for t in self._outstanding if t is not new]
+        self._retire("a donated whole-pool update (set_pool_state)")
+        super().set_pool_state(new)
+
 
 # ----------------------------------------------------------------------
 # engine-level step-boundary checker
@@ -288,6 +321,14 @@ class PoolSanitizer:
                 hold(bid, f"decode seq rid={s.rid} shared")
             for bid in s.private_blocks:
                 hold(bid, f"decode seq rid={s.rid} private")
+        swap = getattr(eng, "swap", None)
+        if swap is not None:
+            # a parked (swapped-out) sequence keeps its cached-prefix refs:
+            # only its PRIVATE pages moved to the swap tier (refcount 0,
+            # SWAPPED population — censused in check_step, not here)
+            for rid, rec in swap.records.items():
+                for bid in rec.seq.shared_blocks:
+                    hold(bid, f"swapped seq rid={rid} shared (swap tier)")
         return holders
 
     # -- checks ----------------------------------------------------------
@@ -306,6 +347,35 @@ class PoolSanitizer:
         for s in eng.scheduler.active:
             yield f"decode seq rid={s.rid}", s.block_table
 
+    def _check_swap_tier(self, pool) -> None:
+        """The SWAPPED population must be exactly the pages the swap tier's
+        records claim are still device-resident: a SWAPPED page with no
+        owning record leaked (its host copy is unreachable), and a record
+        claiming residency the pool disavows would scatter onto a row that
+        belongs to someone else."""
+        swap = getattr(self.engine, "swap", None)
+        claimed: dict[int, int] = {}            # bid -> rid
+        if swap is not None:
+            for rid, rec in swap.records.items():
+                for bid in rec.resident:
+                    if bid in claimed:
+                        _fail(f"page {bid} is claimed swap-resident by BOTH "
+                              f"rid={claimed[bid]} and rid={rid}")
+                    claimed[bid] = rid
+        for bid in sorted(getattr(pool, "_swapped", ())):
+            if bid not in claimed:
+                _fail(f"page {bid} is SWAPPED in the pool but NO swap "
+                      f"record owns its host copy — holder: swap tier "
+                      f"(preempted sequence KV parked in host memory); a "
+                      f"swap_out without a matching HostSwapPool entry "
+                      f"leaks the page")
+        for bid, rid in sorted(claimed.items()):
+            if bid not in pool._swapped:
+                _fail(f"swap record rid={rid} claims page {bid} is still "
+                      f"device-resident but the pool does not have it "
+                      f"SWAPPED — a scatter-on-resume would overwrite a "
+                      f"row owned by someone else")
+
     def check_step(self) -> None:
         eng = self.engine
         pool = eng.block_pool
@@ -315,6 +385,7 @@ class PoolSanitizer:
             if pool.SENTINEL in bt:
                 _fail(f"sentinel page 0 appears in the live block table of "
                       f"{who}: {bt} — padding leaked into ownership")
+        self._check_swap_tier(pool)
         holders = self._expected_refcounts()
         relay = self._relay_published()
         for bid, who in sorted(holders.items()):

@@ -69,7 +69,14 @@ class SamplingParams:
     fan-outs over one prompt give N different draws; pass an explicit seed
     to reproduce a stream across runs. ``max_tokens=0`` is a prefill-only
     request (used by SharedContext to warm a prefix). The terminating
-    eos/stop token IS included in the output."""
+    eos/stop token IS included in the output.
+
+    ``priority`` ranks the request for admission ordering (the scheduler's
+    ``priority`` policy) AND for oversubscription: with preemption armed
+    (``LocalDisaggEngine(preempt=True)``), lower-priority decodes are
+    swapped out or dropped-and-recomputed to unblock higher-priority work.
+    Higher values are more important; the ``priority=`` kwarg on
+    ``generate()`` overrides a nonzero value here."""
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
@@ -77,6 +84,7 @@ class SamplingParams:
     max_tokens: int = 16
     stop_token_ids: tuple = ()
     eos_token_id: int | None = None
+    priority: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "stop_token_ids",
@@ -87,6 +95,10 @@ class SamplingParams:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.max_tokens < 0:
             raise ValueError(f"max_tokens must be >= 0, got {self.max_tokens}")
+        if not isinstance(self.priority, int) or isinstance(self.priority,
+                                                            bool):
+            raise ValueError(
+                f"priority must be an int, got {self.priority!r}")
 
     def is_stop(self, token: int) -> str | None:
         """Finish reason if ``token`` terminates the stream, else None."""

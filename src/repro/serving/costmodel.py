@@ -93,3 +93,51 @@ class CostModel:
         c = flops / (self.chips * PEAK_FLOPS * MXU_EFF)
         m = bytes_ / (self.chips * HBM_BW * BW_EFF)
         return StepCost(max(c, m), c, m, flops, bytes_)
+
+
+class SwapCostModel:
+    """Swap-vs-recompute pricing for preemption (serving/preempt.py).
+
+    Swapping a victim costs two host transfers (gather out now, scatter back
+    at resume) at MEASURED device<->host bandwidth — every transfer the
+    HostSwapPool performs feeds ``observe``, so the estimate converges on
+    the deployment's real link, not a constant. Recomputing costs one
+    prefill of the tokens the radix cache cannot serve (PPD's 'not all
+    prefills are equal': a victim whose stream is fully relay/prefix-covered
+    re-prefills almost for free, and dropping beats transferring).
+    """
+
+    #: conservative host-link prior before any measurement (bytes/s)
+    DEFAULT_HOST_BW = 10e9
+
+    def __init__(self, cost: CostModel):
+        self.cost = cost
+        self.host_bw = self.DEFAULT_HOST_BW
+        self.samples = 0
+
+    def observe(self, nbytes: int, seconds: float) -> None:
+        """EWMA a measured host transfer into the bandwidth estimate."""
+        if seconds <= 0 or nbytes <= 0:
+            return
+        bw = nbytes / seconds
+        self.host_bw = bw if self.samples == 0 else (
+            0.8 * self.host_bw + 0.2 * bw)
+        self.samples += 1
+
+    def transfer_s(self, nbytes: int) -> float:
+        return nbytes / max(self.host_bw, 1.0)
+
+    def recompute_s(self, cold_tokens: int, kv_len: int) -> float:
+        """Re-prefill cost for the tokens the prefix/relay cache misses."""
+        if cold_tokens <= 0:
+            return 0.0
+        return self.cost.prefill(cold_tokens, kv_len - cold_tokens).seconds
+
+    def choose(self, *, swap_bytes: int, cold_tokens: int,
+               kv_len: int) -> str:
+        """'recompute' when re-prefilling the cache-cold tail beats moving
+        the KV host-side and back; 'swap' otherwise."""
+        round_trip = self.transfer_s(2 * swap_bytes)
+        return ("recompute"
+                if self.recompute_s(cold_tokens, kv_len) < round_trip
+                else "swap")

@@ -122,6 +122,7 @@ from repro.serving.decode import (FusedDecodePlane, next_pow2,
                                   sampling_arrays)
 from repro.serving.metrics import (SPAN_FIRST_TOKEN, SPAN_HANDOFF,
                                    SPAN_ROUTED, SPAN_TOKEN, MetricsRegistry)
+from repro.serving.preempt import PreemptConfig, SwapManager
 from repro.serving.registry import ModelRegistry, as_spec
 from repro.serving.router import PrefillRouter
 from repro.serving.sampling import sample_step
@@ -165,6 +166,8 @@ class DecodeSeq:
     tokens: list = field(default_factory=list)  # prompt (relay publication
                                                 # keys pages by full stream)
     first0: int = 2               # the handoff's first decode input token
+    priority: int = 0             # preemption rank (serving/preempt.py):
+                                  # lower priorities are victims first
 
 
 class _CounterField:
@@ -237,12 +240,28 @@ class EngineStats:
     relay_skipped = _CounterField(
         "engine_relay_skipped_total",
         "finished sequences not published (relay-incompatible decoder)")
+    preemptions = _CounterField(
+        "engine_preemptions_total",
+        "decode sequences preempted under pool pressure")
+    swap_out_pages = _CounterField(
+        "engine_swap_out_pages_total",
+        "pages gathered out to the host swap tier")
+    swap_in_pages = _CounterField(
+        "engine_swap_in_pages_total",
+        "pages scattered back from the host swap tier")
+    recompute_tokens = _CounterField(
+        "engine_recompute_tokens_total",
+        "cache-cold tokens re-prefilled to restore dropped victims")
+    swap_bytes = _CounterField(
+        "engine_swap_bytes_total",
+        "KV bytes moved device<->host by the swap tier")
 
     FIELDS = ("prefill_tokens_computed", "prefill_tokens_reused", "handoffs",
               "handoff_bytes", "cow_page_copies", "decode_steps",
               "decode_tokens", "decode_dispatches", "model_churn_events",
               "plane_rebuilds", "relay_publishes", "relay_pages_published",
-              "relay_skipped")
+              "relay_skipped", "preemptions", "swap_out_pages",
+              "swap_in_pages", "recompute_tokens", "swap_bytes")
 
     def __init__(self, _engine: object = None,
                  registry: MetricsRegistry | None = None):
@@ -311,6 +330,11 @@ class EngineStats:
                           if eng.prefix_index is not None
                           else sum(len(w.mgr.index)
                                    for w in eng.prefill_workers)),
+        )
+        swap = getattr(eng, "swap", None)
+        d.update(
+            pages_swapped=sum(getattr(p, "swapped_count", 0) for p in pools),
+            swapped_seqs=len(swap.records) if swap is not None else 0,
         )
         return d
 
@@ -573,7 +597,8 @@ class LocalDisaggEngine:
                  chunk_size: int = 64, sched_policy: str = "fcfs",
                  fused: bool | None = None, prefix_cache: bool = True,
                  relay: bool = True, metrics: bool = True, autoscale=None,
-                 sanitize: bool = False):
+                 sanitize: bool = False, preempt: bool = False,
+                 overcommit: float = 1.0):
         self.cfg = cfg
         self.base_params = base_params
         self.page_size = page_size
@@ -604,6 +629,13 @@ class LocalDisaggEngine:
         if sanitize and not self.paged:
             raise ValueError("sanitize=True requires the paged KV plane "
                              "(the sanitizer checks page refcounts)")
+        if preempt and not self.paged:
+            raise ValueError("preempt=True requires the paged KV plane "
+                             "(the swap tier moves pool pages)")
+        if overcommit != 1.0 and not preempt:
+            raise ValueError(
+                "overcommit > 1 oversubscribes the decode admission reserve "
+                "and is only safe with preemption armed; pass preempt=True")
         if self.paged:
             self.block_pool = BlockPool(num_pages, page_size)
             # sanitize=True swaps in the poisoning pool subclass and a
@@ -657,6 +689,11 @@ class LocalDisaggEngine:
         #: step-boundary invariant checker (None unless sanitize=True);
         #: the scheduler calls sanitizer.check_step() after every step
         self.sanitizer = PoolSanitizer(self) if sanitize else None
+        #: oversubscription subsystem (serving/preempt.py): None unless
+        #: preempt=True; the scheduler drives resume/preempt/grow phases and
+        #: scales the admission reserve by cfg.overcommit when it is armed
+        self.swap = (SwapManager(self, PreemptConfig(overcommit=overcommit))
+                     if preempt else None)
         # model lifecycle: the decode-model set lives in the registry
         # (engine.models) and is mutable while serving — register/unregister
         # take effect for new requests immediately and relayout the fused
@@ -818,6 +855,17 @@ class LocalDisaggEngine:
             reg.gauge("engine_pool_cached_pages",
                       "LRU-cached (evictable) pool pages",
                       fn=lambda: self.block_pool.cached_count)
+            reg.gauge("engine_pool_swapped_pages",
+                      "pages whose KV lives in the host swap tier",
+                      fn=lambda: self.block_pool.swapped_count)
+            reg.gauge("engine_swapped_sequences",
+                      "decode sequences parked in the swap tier",
+                      fn=lambda: (len(self.swap.records)
+                                  if self.swap is not None else 0))
+            reg.gauge("engine_swap_host_bytes",
+                      "host memory held by swapped-out KV",
+                      fn=lambda: (self.swap.host.total_bytes
+                                  if self.swap is not None else 0))
         if self.prefix_index is not None:
             reg.gauge("engine_prefix_nodes", "radix prefix-index nodes",
                       fn=lambda: len(self.prefix_index))
@@ -1009,17 +1057,24 @@ class LocalDisaggEngine:
         sched = self.scheduler
         return (any(r.model_id == model_id for r in sched.waiting)
                 or any(r.model_id == model_id for r in sched.prefilling)
-                or any(s.model_id == model_id for s in sched.active))
+                or any(s.model_id == model_id for s in sched.active)
+                or (self.swap is not None
+                    and any(rec.seq.model_id == model_id
+                            for rec in self.swap.records.values())))
 
     def _inflight_rids(self, model_id: str) -> list[int]:
         sched = self.scheduler
+        parked = ([rid for rid, rec in self.swap.records.items()
+                   if rec.seq.model_id == model_id]
+                  if self.swap is not None else [])
         return ([r.rid for r in sched.waiting if r.model_id == model_id]
                 + [r.rid for r in sched.prefilling if r.model_id == model_id]
-                + [s.rid for s in sched.active if s.model_id == model_id])
+                + [s.rid for s in sched.active if s.model_id == model_id]
+                + parked)
 
     def _handoff_seq(self, block_table, n: int, sid: int, model_id: str,
                      params: SamplingParams, first_token: int,
-                     rid: int, tokens=None) -> DecodeSeq:
+                     rid: int, tokens=None, priority: int = 0) -> DecodeSeq:
         """Zero-copy handoff: block-table reference + page refcounts, with a
         page-level copy-on-write clone of a partially-filled tail page so the
         decode sequence can append privately. Raises PoolExhausted (with the
@@ -1064,7 +1119,7 @@ class LocalDisaggEngine:
         return DecodeSeq(rid, sid, model_id, bt, shared, private, n,
                          first_token, params.max_tokens, params,
                          tokens=list(tokens) if tokens is not None else [],
-                         first0=first_token)
+                         first0=first_token, priority=priority)
 
     def submit(self, sid: int, context_tokens, model_id: str,
                gen_tokens: int, first_token: int = 2,
@@ -1120,7 +1175,8 @@ class LocalDisaggEngine:
             self._finish_prefill_only(rid)
             return rid
         self.scheduler.add_decode_seq(self._handoff_seq(
-            bt, n, sid, model_id, params, first_token, rid, tokens=tokens))
+            bt, n, sid, model_id, params, first_token, rid, tokens=tokens,
+            priority=priority))
         return rid
 
     # ------------------------------------------------------------------
@@ -1140,6 +1196,8 @@ class LocalDisaggEngine:
         it yourself with ``run()``/``step()``."""
         self.models.check_serving(model_id)   # UnknownModelError before any
         params = SamplingParams() if params is None else params   # state
+        if not priority:
+            priority = params.priority    # SamplingParams carries it too
         ephemeral = session is None
         sid = self._new_context_sid() if ephemeral else session
         if not self.paged:
@@ -1208,6 +1266,14 @@ class LocalDisaggEngine:
             else:
                 r.worker.mgr.abandon(r.alloc)
                 r.worker.pending_chunk_tokens -= r.n - r.done
+            self._on_request_aborted(rid)
+            return True
+        if self.swap is not None and rid in self.swap.records:
+            # parked in the swap tier: shared refs released, still-resident
+            # swapped rows freed, host copy discarded — free pages return
+            # exactly to the pre-request baseline (revoked rows already
+            # belong to their new owners and are not touched)
+            self.swap.abort(rid)
             self._on_request_aborted(rid)
             return True
         for s in sched.active:                     # decoding

@@ -88,6 +88,8 @@ class Request:
     done: int = 0                # tokens whose KV is in pages (incl. cached)
     committed: bool = False      # published to the radix index / session
     sibling_bt: list | None = None   # identical-context fast path block table
+    resume_seq: object = None    # preempted DecodeSeq this request restores
+                                 # (drop-and-recompute path, serving/preempt)
 
     def __post_init__(self):
         self.tok_hash = hash(tuple(self.tokens))
@@ -126,7 +128,15 @@ class ChunkedScheduler:
         self.active.append(seq)
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.prefilling or self.active)
+        return bool(self.waiting or self.prefilling or self.active
+                    or self._swap_parked())
+
+    def _swap_parked(self) -> bool:
+        """Swap-mode preemption victims parked off the step loop — still the
+        engine's work (they resume and finish) even though they sit in none
+        of the three queues."""
+        swap = self.engine.swap
+        return swap is not None and swap.parked
 
     def run(self) -> None:
         while self.has_work():
@@ -154,26 +164,55 @@ class ChunkedScheduler:
         self.engine._observe_step()
         self.engine._autoscale_tick()
         progress += self._admit()
+        progress += self._oversub_phase()
         budget = self.cfg.token_budget - len(self.active)
         chunks = self._plan_chunks(budget)
         progress += self._run_chunks(chunks)
         progress += self._promote()
+        progress += self._tail_growth_guard()
         progress += self._decode_phase()
         if self.engine.sanitizer is not None:
             # step boundary: every transient ref/alloc has settled, so the
             # pool/index/holder cross-check must hold exactly here
             self.engine.sanitizer.check_step()
-        if progress == 0 and (self.waiting or self.prefilling):
+        if progress == 0 and (self.waiting or self.prefilling
+                              or self._swap_parked()):
             if self.engine.sched_reserve_extra > 0:
                 # the autoscaler's extra decode headroom is advisory — it
                 # must never wedge the engine. If it is the only thing
                 # blocking progress, give it back and retry next step.
                 self.engine.sched_reserve_extra = 0
                 return
+            swap = self.engine.swap
             raise PoolExhausted(
                 f"scheduler stalled: {len(self.waiting)} waiting / "
-                f"{len(self.prefilling)} prefilling requests cannot obtain "
-                f"pages and no decode is active to free any")
+                f"{len(self.prefilling)} prefilling / "
+                f"{len(swap.records) if swap is not None else 0} swapped-out "
+                f"requests cannot obtain pages and no decode is active to "
+                f"free any")
+
+    # ---- oversubscription (serving/preempt.py) -------------------------
+    def _oversub_phase(self) -> int:
+        """After admission, before chunk packing: resume parked victims when
+        pages allow, then preempt low-priority decodes when the highest-
+        priority pending request is page-blocked. Runs before the budget is
+        computed so a resumed sequence claims its decode slot this step."""
+        swap = self.engine.swap
+        if swap is None:
+            return 0
+        progress = swap.resume_step(self)
+        progress += swap.preempt_step(self)
+        return progress
+
+    def _tail_growth_guard(self) -> int:
+        """Right before decode: with overcommit the admission reserve is
+        deliberately under-scaled, so the pool may lack the tail pages the
+        coming decode step must allocate — evict victims until it cannot
+        fail mid-flight."""
+        swap = self.engine.swap
+        if swap is None:
+            return 0
+        return swap.grow_guard(self)
 
     # ---- admission ----------------------------------------------------
     def _admit(self) -> int:
@@ -211,6 +250,10 @@ class ChunkedScheduler:
                 r.done = r.alloc.cached_tokens
                 self.engine.stats.prefill_tokens_reused += r.done
                 w.pending_chunk_tokens += r.n - r.done
+            if r.resume_seq is not None:
+                # drop-and-recompute restore: the cache-cold tail of the
+                # victim's stream is genuine recompute work
+                self.engine.stats.recompute_tokens += r.n - r.done
             self.prefilling.append(r)
             admitted += 1
         return admitted
@@ -222,10 +265,10 @@ class ChunkedScheduler:
         page = self.engine.page_size
         chunks = []
         # prefill never takes the pool below the pages active decodes are
-        # still entitled to (worst-case tail growth) plus the autoscaler's
-        # extra decode headroom, so chunking cannot starve the decode plane
-        # mid-flight
-        reserve = self._decode_reserve() + self.engine.sched_reserve_extra
+        # still entitled to (worst-case tail growth, overcommit-scaled) plus
+        # the autoscaler's extra decode headroom, so chunking cannot starve
+        # the decode plane mid-flight
+        reserve = self._reserve_target()
         pool = self.engine.block_pool
         pending = [r for r in self.prefilling
                    if r.done < r.n and r.sibling_bt is None]
@@ -305,6 +348,17 @@ class ChunkedScheduler:
             max(0, -(-(s.pos + s.remaining) // page) - len(s.block_table))
             for s in self.active)
 
+    def _reserve_target(self) -> int:
+        """Admission floor: the decode reserve, scaled down by the
+        oversubscription factor when preemption is armed — with victims as
+        the escape hatch the pool may admit beyond the strict worst case,
+        which is exactly the paper's oversubscription lever."""
+        reserve = self._decode_reserve()
+        swap = self.engine.swap
+        if swap is not None and swap.cfg.overcommit > 1.0:
+            reserve = -(-reserve // swap.cfg.overcommit)
+        return int(reserve) + self.engine.sched_reserve_extra
+
     # ---- prefill -> decode handoff -------------------------------------
     def _commit_request(self, r: Request) -> None:
         """Publish a fully-prefilled (non-sibling) request for prefix reuse
@@ -347,8 +401,7 @@ class ChunkedScheduler:
             # it could deadlock every generation mid-flight
             cow = 1 if r.n % page else 0
             growth = -(-(r.n + r.gen_tokens) // page) - (-(-r.n // page))
-            if (pool.free_count - cow - growth
-                    < self._decode_reserve() + self.engine.sched_reserve_extra):
+            if pool.free_count - cow - growth < self._reserve_target():
                 self.stats.stalls += 1
                 continue
             bt = r.sibling_bt
@@ -358,7 +411,8 @@ class ChunkedScheduler:
             try:
                 seq = self.engine._handoff_seq(
                     bt, r.n, r.sid, r.model_id, r.params,
-                    r.first_token, r.rid, tokens=r.tokens)
+                    r.first_token, r.rid, tokens=r.tokens,
+                    priority=r.priority)
             except PoolExhausted:
                 self.stats.stalls += 1   # CoW clone page unavailable: retry
                 continue
@@ -366,7 +420,13 @@ class ChunkedScheduler:
                 pool.unref(r.sibling_bt)   # handoff holds its own refs now
             self.prefilling.remove(r)
             self.active.append(seq)
-            self.promoted.append(r.rid)
+            if r.resume_seq is not None:
+                # drop-and-recompute restore: graft the preempted victim's
+                # identity onto the re-prefilled sequence; the rid already
+                # completed its public prefill, so it is not re-promoted
+                self.engine.swap.finish_recompute_resume(r, seq)
+            else:
+                self.promoted.append(r.rid)
             promoted += 1
         return promoted
 

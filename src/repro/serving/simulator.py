@@ -85,6 +85,18 @@ class ServingConfig:
                                    # active counts, and a recurring tick
                                    # shifts workers between the pools off
                                    # backlog/occupancy/TTFT signals.
+    overcommit: float = 1.0        # admission oversubscription (the engine's
+                                   # LocalDisaggEngine(overcommit=)): the
+                                   # session cap is multiplied by this, and
+                                   # decode HBM overflow is absorbed by the
+                                   # host-memory swap tier instead of the
+                                   # B.2 staging inflation. 1.0 = historical
+                                   # behaviour (no swap tier).
+    swap_gbps: float = 10.0        # host<->device swap bandwidth (GB/s) the
+                                   # swap tier drains overflow at; each
+                                   # preemption stalls the worker for
+                                   # excess_bytes / bandwidth (the engine's
+                                   # measured-bandwidth SwapCostModel).
 
 
 @dataclass
@@ -152,6 +164,7 @@ class _DecodeWorker:
         self.wait = []
         self.last_t = 0.0
         self.gen_tokens = 0
+        self.swapped_bytes = 0.0   # overflow parked in the host swap tier
 
     # -- fluid batching ------------------------------------------------
     def resident_bytes(self):
@@ -164,7 +177,11 @@ class _DecodeWorker:
         avg_kv = np.mean([r["kv_len"] for r in self.active.values()])
         t = self.cost.decode_step(b, avg_kv).seconds
         free = self.hbm - self.weight_bytes
-        over = max(0.0, self.resident_bytes() - free) / max(free, 1.0)
+        # swapped-out KV lives in host memory, not HBM: it neither inflates
+        # the staging term nor counts against the budget (the swap stall is
+        # priced separately, at preemption time)
+        over = (max(0.0, self.resident_bytes() - self.swapped_bytes - free)
+                / max(free, 1.0))
         return t * (1.0 + 3.0 * over)   # staging/reload inflation (B.2)
 
     def advance(self, now):
@@ -245,7 +262,10 @@ class Simulator:
                            hbm_bytes=scfg.hbm_per_worker,
                            weight_bytes=model_cfg.param_count() * 2,
                            max_context_tokens=max_ctx)
-        self.effective_cap = self.b2.session_cap(scfg.max_concurrent)
+        # oversubscription: the swap tier backs more admitted sessions than
+        # decode HBM can hold at once (the engine's overcommit= knob)
+        self.effective_cap = int(self.b2.session_cap(scfg.max_concurrent)
+                                 * max(1.0, scfg.overcommit))
         self.router = PrefillRouter(scfg.n_prefill_workers,
                                     policy=scfg.router_policy)
         self.rng = np.random.default_rng(seed)     # eos_prob length draws
@@ -260,6 +280,8 @@ class Simulator:
         self.churn_events = 0
         self.churn_stall_s = 0.0
         self.resize_events = 0
+        self.preemptions = 0
+        self.swap_stall_s = 0.0
         if scfg.churn_interval_s > 0:
             self._push(scfg.churn_interval_s, "model_churn", None)
         if self.autoscaler is not None:
@@ -548,7 +570,37 @@ class Simulator:
                           "meta": (st, inv, rec)}
         rec.ttft = t + dw.itl() - rec.issued        # first token after one step
         self._ttft_window.append(rec.ttft)          # autoscaler p95 signal
+        self._maybe_swap(t, dw)
         self._reschedule(t, dw)
+
+    def _maybe_swap(self, t, dw: _DecodeWorker):
+        """Preempt decode HBM overflow into the host swap tier.
+
+        With ``overcommit > 1`` armed, a worker whose resident KV exceeds the
+        HBM budget swaps the excess out at ``swap_gbps`` instead of paying the
+        B.2 staging inflation forever: progress freezes for the transfer (the
+        engine's gather + device_get), after which the remaining resident set
+        decodes at un-inflated speed. Uses the churn-stall idiom — ``last_t``
+        is parked in the future and ``advance()`` clamps on dt <= 0."""
+        if self.scfg.overcommit <= 1.0 or self.scfg.swap_gbps <= 0:
+            return
+        # finished sequences take their swapped share with them (the engine
+        # discards a finished victim's host entry)
+        dw.swapped_bytes = min(dw.swapped_bytes, dw.resident_bytes())
+        free = dw.hbm - dw.weight_bytes
+        excess = dw.resident_bytes() - dw.swapped_bytes - free
+        # hysteresis (the engine's PreemptConfig.hysteresis_steps): per-token
+        # residency growth accumulates until it is worth one batched swap,
+        # instead of counting a "preemption" every completion check
+        if excess <= 0.02 * free:
+            return
+        stall = excess / (self.scfg.swap_gbps * 1e9)
+        dw.swapped_bytes += excess
+        dw.last_t = max(dw.last_t, t + stall)
+        self.preemptions += 1
+        self.swap_stall_s += stall
+        # NO _reschedule here: both call sites reschedule right after, and a
+        # second push per check would double the event stream every step
 
     def _reschedule(self, t, dw: _DecodeWorker):
         nxt = dw.next_completion(t)
@@ -560,6 +612,7 @@ class Simulator:
         finished = dw.advance(t)
         for rid, r in finished:
             self._decode_finished(t, r)
+        self._maybe_swap(t, dw)
         self._reschedule(t, dw)
 
     def _decode_finished(self, t, r):
@@ -611,6 +664,8 @@ class Simulator:
             "churn_events": self.churn_events,
             "churn_stall_s": self.churn_stall_s,
             "resize_events": self.resize_events,
+            "preemptions": self.preemptions,
+            "swap_stall_s": self.swap_stall_s,
             "final_prefill_workers": self.n_prefill_on,
             "final_decode_workers": self.n_decode_on,
         }

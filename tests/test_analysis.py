@@ -304,6 +304,51 @@ def test_rpr006_negative_instrument_in_init(tmp_path):
 
 
 # ======================================================================
+# RPR007 host-materialized-pool-pages
+# ======================================================================
+
+def test_rpr007_positive_host_copy_of_pool_pages(tmp_path):
+    fs = run_rules(tmp_path, """
+        import numpy as np
+
+        def snapshot(kvpool):
+            return np.asarray(kvpool.k_groups[0])
+    """)
+    assert rule_ids(fs) == ["RPR007"]
+    assert "swap tier" in fs[0].message
+
+
+def test_rpr007_positive_device_get_pool_state(tmp_path):
+    fs = run_rules(tmp_path, """
+        import jax
+
+        def dump(kvpool):
+            return jax.device_get(kvpool.pool_state())
+    """)
+    assert rule_ids(fs) == ["RPR007"]
+
+
+def test_rpr007_negative_sanctioned_swap_module(tmp_path):
+    fs = run_rules(tmp_path, """
+        import jax
+
+        def put(kvpool):
+            return jax.device_get(kvpool.pool_state())
+    """, name="kvcache/swap.py")
+    assert fs == []
+
+
+def test_rpr007_negative_non_pool_asarray(tmp_path):
+    fs = run_rules(tmp_path, """
+        import numpy as np
+
+        def tokens_of(seq):
+            return np.asarray(seq.out, np.int32)
+    """)
+    assert fs == []
+
+
+# ======================================================================
 # framework: fingerprints, baseline round-trip, JSON schema, CLI
 # ======================================================================
 
@@ -319,7 +364,7 @@ class Worker:
 def test_every_rule_has_id_and_registry_entry():
     ids = [r.rule_id for r in ALL_RULES]
     assert ids == sorted(ids) and len(set(ids)) == len(ids)
-    assert set(RULES_BY_ID) == {f"RPR00{i}" for i in range(1, 7)}
+    assert set(RULES_BY_ID) == {f"RPR00{i}" for i in range(1, 8)}
 
 
 def test_fingerprints_stable_across_line_shifts(tmp_path):

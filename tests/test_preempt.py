@@ -1,0 +1,324 @@
+"""Oversubscription: priority preemption with the host-memory KV swap tier.
+
+Every preempted run must be TOKEN-BIT-IDENTICAL to the same fleet run
+without preemption (greedy and seeded), page refcounts must return to
+baseline after storms and aborts at every lifecycle stage, and the
+sanitizer must census SWAPPED pages as first-class state.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kvcache.sanitize import SanitizerError
+from repro.kvcache.swap import HostSwapPool, next_pow2
+from repro.models import init_params
+from repro.serving.api import SamplingParams
+from repro.serving.engine import LocalDisaggEngine
+
+CFG = ModelConfig(name="preempt-eng", arch_type="dense", n_layers=2,
+                  d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                  vocab_size=64, dtype="float32")
+PAGE = 8
+PAGES = 18          # tight: 2 long lo-pri decodes + 2 hi-pri prompts collide
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _build(**kw):
+    kw.setdefault("num_pages", PAGES)
+    eng = LocalDisaggEngine(CFG, PARAMS, paged=True, page_size=PAGE,
+                            chunked=True, **kw)
+    eng.models.register("m", PARAMS)
+    return eng
+
+
+def _run_fleet(mode=None, seeded=False, **kw):
+    """The contention fleet: two long low-priority decodes fill the pool,
+    then two high-priority prompts arrive and need pages NOW."""
+    eng = _build(**kw)
+    if mode:
+        eng.swap.cfg.mode = mode
+    sp = dict(temperature=0.8, top_k=8, seed=123) if seeded else {}
+    lo = [eng.generate("m", [2 + i] * 9, SamplingParams(max_tokens=40, **sp),
+                       priority=0)
+          for i in range(2)]
+    for _ in range(4):
+        eng.step()
+    hi = [eng.generate("m", [30 + i] * 17, SamplingParams(max_tokens=6, **sp),
+                       priority=5)
+          for i in range(2)]
+    eng.run()
+    return eng, [list(h.result()) for h in lo + hi]
+
+
+def _start_decode(eng, tokens=None, max_tokens=12, priority=0):
+    h = eng.generate("m", tokens or list(range(1, 12)),
+                     SamplingParams(max_tokens=max_tokens), priority=priority)
+    for _ in range(32):
+        eng.step()
+        if eng.scheduler.active:
+            return h
+    raise AssertionError("request never reached decode")
+
+
+# ======================================================================
+# swap tier data plane (kvcache/swap.py)
+# ======================================================================
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+def _rows(kvpool, bids):
+    """Host copies of the pool rows for ``bids`` (tests are exempt from
+    RPR007 — this is exactly what production code must not do)."""
+    st = kvpool.pool_state()
+    out = []
+    for key in ("kg", "vg"):
+        for _, a in sorted(st[key].items()):
+            out.append(np.asarray(a)[:, list(bids)])
+    for key in ("kt", "vt"):
+        for a in st[key]:
+            out.append(np.asarray(a)[list(bids)])
+    return out
+
+
+def test_host_swap_roundtrip_bit_identical():
+    """put -> restore into DIFFERENT device rows reproduces the original
+    page KV bit-for-bit across every layer group and tail."""
+    eng = _build(num_pages=32)
+    _start_decode(eng)
+    seq = eng.scheduler.active[0]
+    assert seq.private_blocks, "fixture must produce private pages"
+    bids = list(seq.private_blocks)
+    before = _rows(eng.kvpool, bids)
+
+    host = HostSwapPool()
+    nbytes = host.put(eng.kvpool, 999, bids)
+    assert nbytes == len(bids) * eng.kvpool.page_bytes
+    assert 999 in host and host.entry_pages(999) == len(bids)
+
+    dst = eng.block_pool.alloc(len(bids))
+    host.restore(eng.kvpool, 999, list(range(len(bids))), dst)
+    after = _rows(eng.kvpool, dst)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    host.pop(999)
+    assert len(host) == 0 and host.total_bytes == 0
+
+
+def test_host_swap_pool_rejects_duplicate_rid():
+    eng = _build(num_pages=32)
+    _start_decode(eng)
+    bids = list(eng.scheduler.active[0].private_blocks)
+    host = HostSwapPool()
+    host.put(eng.kvpool, 7, bids)
+    with pytest.raises(AssertionError, match="already swapped"):
+        host.put(eng.kvpool, 7, bids)
+
+
+# ======================================================================
+# priority plumbing (satellite a)
+# ======================================================================
+
+def test_priority_param_validation():
+    with pytest.raises(ValueError, match="priority must be an int"):
+        SamplingParams(priority="high")
+    with pytest.raises(ValueError, match="priority must be an int"):
+        SamplingParams(priority=True)
+    assert SamplingParams(priority=-3).priority == -3
+
+
+def test_priority_reaches_decode_seq():
+    eng = _build()
+    _start_decode(eng, priority=3)
+    assert eng.scheduler.active[0].priority == 3
+    eng.run()
+
+    eng = _build()
+    h = eng.generate("m", list(range(1, 12)),
+                     SamplingParams(max_tokens=4, priority=2))
+    for _ in range(32):
+        eng.step()
+        if eng.scheduler.active:
+            break
+    assert eng.scheduler.active[0].priority == 2
+    h.result()
+
+
+def test_engine_flag_validation():
+    with pytest.raises(ValueError, match="preempt=True requires the paged"):
+        LocalDisaggEngine(CFG, PARAMS, paged=False, preempt=True)
+    with pytest.raises(ValueError, match="only safe with preemption armed"):
+        _build(overcommit=2.0)
+
+
+# ======================================================================
+# bit-identity: preempted == never-preempted
+# ======================================================================
+
+def test_preempt_auto_greedy_bit_identical():
+    _, ref = _run_fleet()
+    eng, got = _run_fleet(preempt=True, overcommit=2.0, sanitize=True)
+    assert got == ref
+    assert eng.stats()["preemptions"] >= 1
+    assert eng.block_pool.free_count == PAGES          # baseline restored
+    assert eng.stats()["pages_swapped"] == 0
+    assert eng.stats()["swapped_seqs"] == 0
+
+
+def test_forced_swap_mode_bit_identical_with_counters():
+    _, ref = _run_fleet()
+    eng, got = _run_fleet(mode="swap", preempt=True, overcommit=2.0,
+                          sanitize=True)
+    assert got == ref
+    s = eng.stats()
+    assert s["preemptions"] >= 1
+    assert s["swap_out_pages"] >= 1
+    assert s["swap_bytes"] >= eng.kvpool.page_bytes
+    assert eng.block_pool.free_count == PAGES
+    assert len(eng.swap.host) == 0                     # all entries popped
+
+
+def test_forced_recompute_mode_bit_identical_with_counters():
+    _, ref = _run_fleet()
+    eng, got = _run_fleet(mode="recompute", preempt=True, overcommit=2.0,
+                          sanitize=True)
+    assert got == ref
+    s = eng.stats()
+    assert s["preemptions"] >= 1
+    assert s["recompute_tokens"] >= 1
+    assert eng.block_pool.free_count == PAGES
+
+
+def test_seeded_sampling_bit_identical_both_modes():
+    """Sampling keys fold from (seed, absolute position): parking a victim
+    must not shift a single draw, in either restore path."""
+    _, ref = _run_fleet(seeded=True)
+    e_sw, got_sw = _run_fleet(mode="swap", seeded=True, preempt=True,
+                              overcommit=2.0, sanitize=True)
+    e_rc, got_rc = _run_fleet(mode="recompute", seeded=True, preempt=True,
+                              overcommit=2.0, sanitize=True)
+    assert got_sw == ref
+    assert got_rc == ref
+    assert e_sw.stats()["preemptions"] >= 1
+    assert e_rc.stats()["preemptions"] >= 1
+
+
+# ======================================================================
+# abort at every lifecycle stage, including swapped-out
+# ======================================================================
+
+def _park_one(eng):
+    """Drive the fleet until one victim is parked in the swap tier."""
+    lo = [eng.generate("m", [2 + i] * 9, SamplingParams(max_tokens=40),
+                       priority=0)
+          for i in range(2)]
+    for _ in range(4):
+        eng.step()
+    hi = [eng.generate("m", [30 + i] * 17, SamplingParams(max_tokens=6),
+                       priority=5)
+          for i in range(2)]
+    for _ in range(64):
+        eng.step()
+        if eng.swap.records:
+            return lo, hi
+    raise AssertionError("no victim was ever parked")
+
+
+def test_abort_while_swapped_returns_pool_to_baseline():
+    eng = _build(preempt=True, overcommit=2.0, sanitize=True)
+    eng.swap.cfg.mode = "swap"
+    lo, hi = _park_one(eng)
+    parked_rid = next(iter(eng.swap.records))
+    victim = next(h for h in lo if h.request_id == parked_rid)
+    assert eng.stats()["swapped_seqs"] == 1
+    assert eng.abort(victim)
+    assert victim.finished and victim.finish_reason == "abort"
+    assert parked_rid not in eng.swap.records
+    assert parked_rid not in eng.swap.host
+    eng.run()
+    for h in lo + hi:
+        if h is not victim:
+            h.result()
+    assert eng.block_pool.free_count == PAGES
+    assert eng.block_pool.swapped_count == 0
+
+
+def test_abort_every_stage_with_preempt_armed():
+    eng = _build(preempt=True, overcommit=2.0, sanitize=True)
+    prompt = list(range(1, 12))
+    # queued
+    h = eng.generate("m", prompt, SamplingParams(max_tokens=4))
+    assert eng.abort(h) and h.finish_reason == "abort"
+    # mid-prefill
+    h = eng.generate("m", prompt, SamplingParams(max_tokens=4))
+    eng.step()
+    assert eng.abort(h) and h.finish_reason == "abort"
+    # decoding
+    h = _start_decode(eng, max_tokens=8)
+    assert eng.abort(h) and h.finish_reason == "abort"
+    eng.run()
+    assert eng.block_pool.free_count == PAGES
+
+
+# ======================================================================
+# storm: refcounts to baseline under sustained churn
+# ======================================================================
+
+def test_preempt_storm_sanitized_refcounts_baseline():
+    """Mixed-priority storm on a tight pool with the sanitizer checking
+    every step: everything finishes, nobody thrashes, pool to baseline."""
+    eng = _build(preempt=True, overcommit=2.0, sanitize=True)
+    rng = np.random.default_rng(0)
+    hs = []
+    for wave in range(3):
+        for i in range(2):
+            pr = int(rng.integers(0, 6))
+            toks = [int(t) for t in rng.integers(2, 60, size=9)]
+            hs.append(eng.generate("m", toks,
+                                   SamplingParams(max_tokens=10 + 4 * i),
+                                   priority=pr))
+        for _ in range(6):
+            eng.step()
+    eng.run()
+    for h in hs:
+        h.result()
+        assert h.finish_reason == "length"
+    assert eng.block_pool.free_count == PAGES
+    assert eng.block_pool.swapped_count == 0
+    assert len(eng.swap.host) == 0
+    # thrash gate: hysteresis bounds per-sequence park/resume churn
+    assert all(n <= 4 for n in eng.swap.resume_counts.values())
+
+
+# ======================================================================
+# sanitizer: SWAPPED pages are first-class censused state
+# ======================================================================
+
+def test_swapped_page_without_record_names_swap_tier():
+    """A page seeded SWAPPED with no owning swap record must trip the step
+    census with a diagnostic naming the swap tier as the holder class."""
+    eng = _build(sanitize=True)
+    _start_decode(eng)
+    seq = eng.scheduler.active[0]
+    assert seq.private_blocks
+    bid = seq.private_blocks[0]
+    eng.block_pool.swap_out([bid])          # no HostSwapPool entry: leaked
+    with pytest.raises(SanitizerError, match="holder: swap tier"):
+        eng.step()
+
+
+def test_stats_surface_while_parked():
+    eng = _build(preempt=True, overcommit=2.0)
+    eng.swap.cfg.mode = "swap"
+    lo, hi = _park_one(eng)
+    s = eng.stats()
+    assert s["swapped_seqs"] >= 1
+    assert s["pages_swapped"] == eng.block_pool.swapped_count
+    assert eng.scheduler.has_work()         # parked victims ARE pending work
+    eng.run()
+    for h in lo + hi:
+        h.result()
+    assert eng.block_pool.free_count == PAGES
